@@ -1,0 +1,26 @@
+"""Shared benchmark plumbing. Benchmarks run on 8 emulated host devices (set
+before jax import by benchmarks/run.py) — the thesis's 6-node i7 cluster
+analogue."""
+import time
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def mesh_of(n: int) -> Mesh:
+    return Mesh(np.array(jax.devices()[:n]), ("data",))
+
+
+def timed(fn, *args, repeats=3, warmup=1, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats, out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

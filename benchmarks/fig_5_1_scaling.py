@@ -1,0 +1,31 @@
+"""Figs 5.1–5.3 — scalability patterns vs #cloudlets × #members; classifies
+each curve into the thesis's §5.1.1 regimes via the speedup model."""
+import jax
+
+from benchmarks.common import emit, mesh_of
+from repro.core.cloudsim import SimulationConfig, run_simulation
+from repro.core.speedup import SpeedupModel
+
+
+def main():
+    n_devs = len(jax.devices())
+    ns = [n for n in (1, 2, 4, 8) if n <= n_devs]
+    for n_cl, iters in [(150, 0.3), (200, 1.0), (400, 2.0)]:
+        cfg = SimulationConfig(n_vms=200, n_cloudlets=n_cl,
+                               broker="round_robin", is_loaded=True,
+                               workload_iters_per_gmi=iters)
+        times = []
+        for n in ns:
+            r = run_simulation(cfg, mesh_of(n))
+            times.append(sum(r.timings.values()))
+            emit(f"f5.1/cl{n_cl}/n{n}", times[-1] * 1e6, "")
+        diffs = [b - a for a, b in zip(times, times[1:])]
+        signs = [d < 0 for d in diffs]
+        regime = ("positive" if all(signs) else
+                  "negative" if not any(signs) else
+                  "positive-then-negative" if signs[0] else "complex")
+        emit(f"f5.3/cl{n_cl}/regime", 0.0, regime)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Figs 5.4–5.7 — matchmaking-based scheduling: time, speedup %, efficiency
+vs members (Eqs 3.7/3.8/3.10)."""
+import jax
+
+from benchmarks.common import emit, mesh_of
+from repro.core.cloudsim import SimulationConfig, run_simulation
+
+
+def main():
+    n_devs = len(jax.devices())
+    ns = [n for n in (1, 2, 4, 8) if n <= n_devs]
+    for n_cl in (200, 400, 800):
+        cfg = SimulationConfig(n_vms=200, n_cloudlets=n_cl,
+                               broker="matchmaking", is_loaded=True,
+                               workload_iters_per_gmi=1.0)
+        t1 = None
+        for n in ns:
+            r = run_simulation(cfg, mesh_of(n))
+            t = sum(r.timings.values())
+            t1 = t if n == 1 else t1
+            s = t1 / t
+            emit(f"f5.4/cl{n_cl}/n{n}", t * 1e6,
+                 f"speedup={s:.2f};eff={s / n:.2f};improve%={100 * (1 - 1 / s):.0f}")
+
+
+if __name__ == "__main__":
+    main()

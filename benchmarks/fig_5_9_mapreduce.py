@@ -1,0 +1,32 @@
+"""Figs 5.9–5.11 — MapReduce word count: Hazelcast-style vs Infinispan-style
+backends, scaling size (reduce invocations) and member count (map
+invocations = files)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, mesh_of
+from repro.core.mapreduce import MapReduceEngine, make_corpus, word_count_job
+
+
+def main():
+    n_devs = len(jax.devices())
+    ns = [n for n in (1, 2, 4, 8) if n <= n_devs]
+    # Fig 5.9: size sweep on 1 member, both backends
+    for vocab, file_len in [(1024, 4096), (4096, 16384), (16384, 65536)]:
+        corpus = jnp.asarray(make_corpus(8, file_len, vocab))
+        for backend in ("hazelcast", "infinispan"):
+            eng = MapReduceEngine(mesh_of(1), backend=backend)
+            _, secs = eng.benchmark(word_count_job(vocab), corpus, repeats=3)
+            emit(f"f5.9/{backend}/reduce{vocab}", secs * 1e6,
+                 f"map_inv=8;reduce_inv={vocab}")
+    # Figs 5.10/5.11: member scaling, fixed job
+    corpus = jnp.asarray(make_corpus(8, 32768, 8192))
+    for backend in ("hazelcast", "infinispan"):
+        for n in ns:
+            eng = MapReduceEngine(mesh_of(n), backend=backend)
+            _, secs = eng.benchmark(word_count_job(8192), corpus, repeats=3)
+            emit(f"f5.10/{backend}/n{n}", secs * 1e6, "map_inv=8")
+
+
+if __name__ == "__main__":
+    main()

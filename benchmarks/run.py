@@ -1,0 +1,31 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  Runs on 8 emulated host devices
+(the thesis's research-lab-cluster analogue); set BEFORE jax import."""
+import os
+
+if "--one-device" not in __import__("sys").argv:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig_5_1_scaling, fig_5_4_matchmaking,
+                            fig_5_9_mapreduce, serve_brokers, speedup_model,
+                            table_5_1, table_5_2_elastic)
+    print("name,us_per_call,derived")
+    for mod in (table_5_1, fig_5_1_scaling, fig_5_4_matchmaking,
+                fig_5_9_mapreduce, table_5_2_elastic, speedup_model,
+                serve_brokers):
+        try:
+            mod.main()
+        except Exception:
+            print(f"{mod.__name__},FAILED,", flush=True)
+            traceback.print_exc()
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Serving analogue of §5.1.2: round-robin vs matchmaking request schedulers
+under a mixed workload (utilization + steps to drain)."""
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.models.model import build_model
+from repro.serve.scheduler import Request, ServeEngine
+
+
+def main():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=128)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, 128, size=int(rng.integers(2, 10))).astype(
+        np.int32), int(rng.integers(2, 6))) for _ in range(10)]
+    for policy in ("round_robin", "matchmaking"):
+        eng = ServeEngine(model, params, n_slots=4, max_len=48, policy=policy)
+        for i, (p, m) in enumerate(reqs):
+            eng.sched.submit(Request(i, p, max_new_tokens=m))
+        out = eng.run(max_steps=128)
+        emit(f"serve/{policy}", float(out["steps"]),
+             f"completed={len(out['completed'])};dropped={out['dropped']}")
+
+
+if __name__ == "__main__":
+    main()

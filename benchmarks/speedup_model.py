@@ -1,0 +1,23 @@
+"""§3.3 — the analytical speedup model's four regimes, with parameters wired
+to the measured Table-5.1 data (model vs measurement)."""
+from benchmarks.common import emit
+from repro.core.speedup import SpeedupModel
+
+
+def main():
+    cases = {
+        "success":   SpeedupModel(t1=1247.0, k=0.995, c_per_n=2.0, fixed=12.0),
+        "coordination_heavy": SpeedupModel(t1=3.7, k=0.30, c_per_n=2.2,
+                                           fixed=9.0),
+        "common":    SpeedupModel(t1=120.0, k=0.97, c_per_n=4.0, fixed=6.0),
+        "borderline": SpeedupModel(t1=40.0, k=0.93, s_cost=6.0, c_per_n=1.4,
+                                   fixed=2.0),
+    }
+    ns = [1, 2, 3, 4, 5, 6]
+    for name, m in cases.items():
+        curve = ";".join(f"{t:.1f}" for t in m.curve(ns))
+        emit(f"model/{name}", 0.0, f"regime={m.regime(ns)};T_n={curve}")
+
+
+if __name__ == "__main__":
+    main()

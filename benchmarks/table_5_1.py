@@ -1,0 +1,33 @@
+"""Table 5.1 — CloudSim vs Cloud²Sim execution time, simple vs loaded, for
+1/2/4/8 members.  ("CloudSim" = the single-member sequential run.)"""
+import jax
+
+from benchmarks.common import emit, mesh_of
+from repro.core.cloudsim import SimulationConfig, run_simulation
+
+
+def main():
+    n_devs = len(jax.devices())
+    rows = {}
+    for loaded in (False, True):
+        cfg = SimulationConfig(n_vms=200, n_cloudlets=400,
+                               broker="round_robin", is_loaded=loaded,
+                               workload_iters_per_gmi=1.0)
+        for n in [1, 2, 4, 8]:
+            if n > n_devs:
+                continue
+            r = run_simulation(cfg, mesh_of(n))
+            total = sum(r.timings.values())
+            rows[(loaded, n)] = total
+            tag = "loaded" if loaded else "simple"
+            emit(f"t5.1/{tag}/n{n}", total * 1e6,
+                 f"makespan={r.makespan:.1f}")
+    if (True, 1) in rows and (True, max(k[1] for k in rows)) in rows:
+        nmax = max(k[1] for k in rows)
+        emit("t5.1/loaded/speedup", 0.0,
+             f"S_{nmax}={rows[(True, 1)] / rows[(True, nmax)]:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

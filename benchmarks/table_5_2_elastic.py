@@ -1,0 +1,29 @@
+"""Table 5.2 — load averages with adaptive scaling: the elastic runner's
+health/scale-event log during a real training run."""
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.core.health import HealthConfig
+from repro.data.pipeline import DataConfig
+from repro.models.model import build_model
+from repro.train.elastic_runner import run_elastic_training
+
+
+def main():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                  vocab_size=256)
+    model = build_model(cfg, remat=False, xent_chunk=16)
+    rep = run_elastic_training(
+        model, steps=24, data_cfg=DataConfig(256, 32, 8), start_instances=1,
+        health_cfg=HealthConfig(target_step_time=1e-4, min_threshold=-1.0,
+                                time_between_scaling=6, window=3))
+    emit("t5.2/scale_events", 0.0,
+         ";".join(f"step{s}:{d}->{n}" for s, d, n in rep.scale_events)
+         or "none")
+    emit("t5.2/final_members", float(rep.final_n_instances), "")
+
+
+if __name__ == "__main__":
+    main()

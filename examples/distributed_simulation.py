@@ -1,0 +1,44 @@
+"""The paper's core experiment: a distributed CloudSim simulation.
+
+    python examples/distributed_simulation.py        (8 emulated members)
+
+Round-robin and fair-matchmaking brokers schedule 400 cloudlets onto 200 VMs;
+entity storage lives in the DataGrid, scheduling+workloads execute
+member-locally (executeOnKeyOwner), and results are identical for any member
+count — the thesis's accuracy claim."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.cloudsim import SimulationConfig, run_simulation
+
+
+def main():
+    devs = jax.devices()
+    print(f"members available: {len(devs)}")
+    for broker in ("round_robin", "matchmaking"):
+        cfg = SimulationConfig(n_vms=200, n_cloudlets=400, broker=broker,
+                               is_loaded=True, workload_iters_per_gmi=0.5)
+        base = None
+        for n in (1, 2, 8):
+            mesh = Mesh(np.array(devs[:n]), ("data",))
+            r = run_simulation(cfg, mesh)
+            if base is None:
+                base = r
+            else:
+                assert np.array_equal(base.vm_assign, r.vm_assign)
+            t = sum(r.timings.values())
+            print(f"  {broker:13s} members={n}  makespan={r.makespan:9.1f}  "
+                  f"wall={t:6.2f}s  phases={ {k: round(v, 2) for k, v in r.timings.items()} }")
+        print(f"  {broker}: identical scheduling on 1/2/8 members OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Adaptive scaling + fault tolerance: the IntelligentAdaptiveScaler grows the
+member set under load, and a simulated member crash recovers from the last
+checkpoint (synchronous-backup semantics)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config, reduced
+from repro.core.health import HealthConfig
+from repro.data.pipeline import DataConfig
+from repro.models.model import build_model
+from repro.train.elastic_runner import run_elastic_training
+
+
+def main():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2, d_model=64,
+                  n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                  vocab_size=256)
+    model = build_model(cfg, remat=False, xent_chunk=16)
+    with tempfile.TemporaryDirectory() as ckpt:
+        rep = run_elastic_training(
+            model, steps=30, data_cfg=DataConfig(256, 32, 8),
+            start_instances=1, ckpt_dir=ckpt, inject_failure_at=20,
+            health_cfg=HealthConfig(target_step_time=1e-4,   # always "hot"
+                                    min_threshold=-1.0,
+                                    time_between_scaling=5, window=2))
+    print(f"scale events: {rep.scale_events}")
+    print(f"final members: {rep.final_n_instances}; "
+          f"restarts after injected crash: {rep.restarts}")
+    assert rep.scale_events and rep.restarts == 1
+    print("elastic scaling + crash recovery OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""The paper's default MapReduce job — word count — on both backends
+(the Hazelcast/Infinispan pair), optionally through the Pallas histogram
+kernel (interpret mode on CPU)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.mapreduce import MapReduceEngine, make_corpus, word_count_job
+
+
+def main():
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    vocab, n_files = 2048, 8
+    corpus = jnp.asarray(make_corpus(n_files, 16384, vocab))
+    expected = np.bincount(np.asarray(corpus).reshape(-1), minlength=vocab)
+    print(f"corpus: {n_files} files x 16384 tokens; vocab {vocab}; "
+          f"map() invocations = {n_files}, reduce keys = {vocab}")
+    for backend in ("hazelcast", "infinispan"):
+        eng = MapReduceEngine(mesh, backend=backend)
+        out, secs = eng.benchmark(word_count_job(vocab), corpus)
+        assert np.array_equal(np.asarray(out), expected)
+        print(f"  {backend:11s} {secs * 1e3:8.2f} ms/job  "
+              f"top-5 tokens: {np.argsort(np.asarray(out))[-5:][::-1].tolist()}")
+    out_k = MapReduceEngine(mesh, backend="hazelcast").run(
+        word_count_job(vocab, use_kernel=True), corpus)
+    assert np.array_equal(np.asarray(out_k), expected)
+    print("  pallas histogram kernel backend agrees OK")
+
+
+if __name__ == "__main__":
+    main()

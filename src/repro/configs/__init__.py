@@ -1,0 +1,3 @@
+from repro.configs.base import (ModelConfig, ShapeSpec, SHAPES, TRAIN_4K, PREFILL_32K,
+                                DECODE_32K, LONG_500K, get_config, list_archs, register,
+                                reduced)

@@ -1,0 +1,266 @@
+"""Configuration system: model configs, shape specs, and the arch registry.
+
+Every assigned architecture is a ``ModelConfig`` built in its own module under
+``repro.configs``; ``get_config(arch_id)`` resolves it.  A ``ShapeSpec`` names one
+(seq_len, global_batch, step-kind) cell of the assigned input-shape set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Shape specs (shared by every LM-family arch per the assignment)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention pattern -------------------------------------------------
+    sliding_window: int = 0          # >0: local attention window for local layers
+    global_interval: int = 0         # every Nth layer is global (gemma3: 6 => 5 local:1 global)
+
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    n_experts_active: int = 0
+    d_ff_expert: int = 0
+    moe_interval: int = 1            # MoE replaces MLP every Nth layer (1 = all layers MoE)
+    capacity_factor: float = 1.25
+
+    # --- SSM / hybrid -------------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    attn_interval: int = 0           # 0: all layers attention; k>0: 1 attention per k layers
+                                     # -1: attention-free (pure SSM)
+    ssm_groups: int = 1
+
+    # --- encoder-decoder ----------------------------------------------------
+    encoder_layers: int = 0          # >0 => enc-dec; n_layers is the decoder depth
+
+    # --- modality frontend stubs (assignment: precomputed embeddings) -------
+    frontend: Optional[str] = None   # "vision_stub" | "audio_stub"
+    frontend_tokens: int = 0         # prompt positions consumed by the frontend stub
+    frontend_dim: int = 0            # embedding dim produced by the (stubbed) encoder
+
+    # --- misc ---------------------------------------------------------------
+    norm_eps: float = 1e-6
+    rope_theta: float = 500000.0
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+
+    # --- sharding policy ----------------------------------------------------
+    # "tp": megatron TP over "model" + FSDP over ("pod","data")  (needs n_heads % tp == 0)
+    # "fsdp": 2-D DP/FSDP; "model" axis used for sequence/vocab instead of heads
+    policy: str = "tp"
+    # long_500k applicability (sub-quadratic archs only, per the assignment)
+    supports_long_context: bool = False
+    # source provenance tag from the assignment table
+    source: str = ""
+
+    # ------------------------------------------------------------------ api
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a 256 tile so the table shards evenly (the
+        padded logit columns are ordinary trained-but-never-targeted ids)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.attn_interval == -1
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.attn_interval > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def d_ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_ssm_inner // self.ssm_head_dim
+
+    def layer_kinds(self) -> list:
+        """Per-decoder-layer mixer kind: 'attn' | 'attn_local' | 'attn_global' | 'ssm'."""
+        kinds = []
+        for i in range(self.n_layers):
+            if self.attn_interval == -1:
+                kinds.append("ssm")
+            elif self.attn_interval > 0:
+                # one attention layer per `attn_interval` (jamba: index attn_interval//2)
+                kinds.append("attn" if i % self.attn_interval == self.attn_interval // 2
+                             else "ssm")
+            elif self.global_interval > 0:
+                kinds.append("attn_global" if (i + 1) % self.global_interval == 0
+                             else "attn_local")
+            else:
+                kinds.append("attn")
+        return kinds
+
+    def mlp_kinds(self) -> list:
+        """Per-decoder-layer MLP kind: 'dense' | 'moe' | 'none'."""
+        out = []
+        for i in range(self.n_layers):
+            if self.is_moe and i % self.moe_interval == self.moe_interval - 1:
+                out.append("moe")
+            elif self.d_ff > 0 and not self.is_ssm:
+                out.append("dense")
+            else:
+                out.append("none")
+        return out
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + per-layer), for 6ND cross-checks."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        kinds, mlps = self.layer_kinds(), self.mlp_kinds()
+        for k, m in zip(kinds, mlps):
+            if k.startswith("attn"):
+                total += d * self.n_heads * self.head_dim          # q
+                total += 2 * d * self.n_kv_heads * self.head_dim   # k, v
+                total += self.n_heads * self.head_dim * d          # o
+            else:
+                di, n = self.d_ssm_inner, self.ssm_state
+                total += d * (2 * di + 2 * self.ssm_groups * n + self.ssm_heads)
+                total += di * d + self.ssm_heads * 2 + di * self.ssm_conv
+            if m == "moe":
+                total += self.n_experts * 3 * d * self.d_ff_expert + d * self.n_experts
+            elif m == "dense":
+                total += 3 * d * f
+            total += 2 * d  # norms
+        if self.is_encdec:
+            for _ in range(self.encoder_layers):
+                total += 4 * d * self.n_heads * self.head_dim + 3 * d * f + 2 * d
+            total += self.n_layers * (2 * d * self.n_heads * self.head_dim +
+                                      2 * d * self.n_kv_heads * self.head_dim + d)
+        if self.frontend:
+            total += self.frontend_dim * d + d * d  # 2-layer projector
+        return total
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE counts only routed experts."""
+        if not self.is_moe:
+            return self.param_count()
+        dead = 0
+        for m in self.mlp_kinds():
+            if m == "moe":
+                dead += (self.n_experts - self.n_experts_active) * 3 * self.d_model * self.d_ff_expert
+        return self.param_count() - dead
+
+    def shapes(self) -> list:
+        """The shape cells applicable to this arch (assignment skips noted)."""
+        out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+        if self.supports_long_context:
+            out.append(LONG_500K)
+        return out
+
+    def skipped_shapes(self) -> list:
+        return [] if self.supports_long_context else [LONG_500K]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_ARCH_MODULES = [
+    "smollm_360m", "gemma3_4b", "llama3_8b", "deepseek_7b", "olmoe_1b_7b",
+    "grok1_314b", "llava_next_mistral_7b", "seamless_m4t_medium",
+    "jamba_v0_1_52b", "mamba2_370m",
+]
+
+
+def _load_all() -> None:
+    import importlib
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A smoke-test-sized config of the same family (small layers/width/experts)."""
+    base = dict(
+        n_layers=max(2, min(4, cfg.n_layers)),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+    )
+    if cfg.is_moe:
+        base.update(n_experts=4, n_experts_active=2, d_ff_expert=64)
+    if cfg.ssm_state:
+        base.update(ssm_state=16, ssm_head_dim=16, ssm_expand=2)
+    if cfg.is_hybrid:
+        base.update(n_layers=cfg.attn_interval, attn_interval=cfg.attn_interval)
+    if cfg.global_interval:
+        base.update(n_layers=max(cfg.global_interval, 4), sliding_window=8)
+    if cfg.is_encdec:
+        base.update(encoder_layers=2, n_layers=2)
+    if cfg.frontend:
+        base.update(frontend_tokens=4, frontend_dim=32)
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)

@@ -1,0 +1,12 @@
+"""deepseek-7b — llama-arch dense (MHA: kv == heads). [arXiv:2401.02954; hf]"""
+from repro.configs.base import ModelConfig, register
+
+DEEPSEEK_7B = register(ModelConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab_size=102400, rope_theta=10000.0,
+    tie_embeddings=False,
+    policy="tp",
+    supports_long_context=False,
+    source="arXiv:2401.02954; hf",
+))

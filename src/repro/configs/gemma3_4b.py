@@ -1,0 +1,13 @@
+"""gemma3-4b — dense, 5:1 local:global sliding-window, 128k. [hf:google/gemma-3-1b-pt]"""
+from repro.configs.base import ModelConfig, register
+
+GEMMA3_4B = register(ModelConfig(
+    name="gemma3-4b", family="dense",
+    n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=10240, vocab_size=262144, rope_theta=1000000.0,
+    sliding_window=1024, global_interval=6,   # 5 local : 1 global
+    tie_embeddings=True,
+    policy="fsdp",           # 8 heads do not divide tp=16
+    supports_long_context=True,   # sliding-window local layers are sub-quadratic
+    source="hf:google/gemma-3-1b-pt; unverified",
+))

@@ -1,0 +1,13 @@
+"""grok-1-314b — MoE 8 experts top-2, 64 layers. [hf:xai-org/grok-1; unverified]"""
+from repro.configs.base import ModelConfig, register
+
+GROK1_314B = register(ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab_size=131072, rope_theta=10000.0,
+    n_experts=8, n_experts_active=2, d_ff_expert=32768, moe_interval=1,
+    tie_embeddings=False,
+    policy="tp",
+    supports_long_context=False,
+    source="hf:xai-org/grok-1; unverified",
+))

@@ -1,0 +1,16 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf]"""
+from repro.configs.base import ModelConfig, register
+
+JAMBA_V0_1_52B = register(ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=65536, rope_theta=10000.0,
+    n_experts=16, n_experts_active=2, d_ff_expert=14336, moe_interval=2,
+    attn_interval=8,                       # 1 attention : 7 mamba
+    ssm_state=16, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+    tie_embeddings=False,
+    policy="tp",
+    supports_long_context=True,            # SSM-dominant hybrid
+    source="arXiv:2403.19887; hf",
+))

@@ -1,0 +1,18 @@
+"""llava-next-mistral-7b — VLM: mistral backbone + anyres-tile patch-embedding stub.
+
+The assignment specifies the transformer BACKBONE only; the vision frontend is a
+STUB — ``input_specs()`` supplies precomputed patch embeddings (anyres tiling:
+5 tiles x 576 patches). [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+"""
+from repro.configs.base import ModelConfig, register
+
+LLAVA_NEXT_MISTRAL_7B = register(ModelConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=32000, rope_theta=1000000.0,
+    tie_embeddings=False,
+    frontend="vision_stub", frontend_tokens=2880, frontend_dim=1024,
+    policy="tp",
+    supports_long_context=False,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+))

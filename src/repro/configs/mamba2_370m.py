@@ -1,0 +1,19 @@
+"""mamba2-370m — pure SSM (SSD / state-space duality), attention-free.
+[arXiv:2405.21060; unverified]
+
+Arch-applicability (DESIGN.md): the paper's KV/attention-grid machinery is
+inapplicable; the arch runs under the generic partitioned runtime.
+"""
+from repro.configs.base import ModelConfig, register
+
+MAMBA2_370M = register(ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=50280,
+    attn_interval=-1,                      # attention-free
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+    tie_embeddings=True,
+    policy="tp",
+    supports_long_context=True,
+    source="arXiv:2405.21060; unverified",
+))

@@ -1,0 +1,13 @@
+"""olmoe-1b-7b — MoE 64 experts top-8. [arXiv:2409.02060; hf]"""
+from repro.configs.base import ModelConfig, register
+
+OLMOE_1B_7B = register(ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1024, vocab_size=50304, rope_theta=10000.0,
+    n_experts=64, n_experts_active=8, d_ff_expert=1024, moe_interval=1,
+    tie_embeddings=False,
+    policy="tp",
+    supports_long_context=False,
+    source="arXiv:2409.02060; hf",
+))

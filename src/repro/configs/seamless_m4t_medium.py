@@ -1,0 +1,18 @@
+"""seamless-m4t-medium — encoder-decoder multimodal backbone; audio frontend stub.
+
+``input_specs()`` supplies precomputed frame embeddings for the encoder side.
+[arXiv:2308.11596; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+SEAMLESS_M4T_MEDIUM = register(ModelConfig(
+    name="seamless-m4t-medium", family="audio",
+    n_layers=12, d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=4096, vocab_size=256206, rope_theta=10000.0,
+    encoder_layers=12,
+    tie_embeddings=True,
+    frontend="audio_stub", frontend_dim=1024,
+    policy="tp",
+    supports_long_context=False,   # speech enc-dec: 500k-token decode not meaningful
+    source="arXiv:2308.11596; hf",
+))

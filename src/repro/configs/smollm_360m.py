@@ -1,0 +1,12 @@
+"""smollm-360m — llama-arch small dense LM. [hf:HuggingFaceTB/SmolLM-135M; hf]"""
+from repro.configs.base import ModelConfig, register
+
+SMOLLM_360M = register(ModelConfig(
+    name="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, head_dim=64,
+    d_ff=2560, vocab_size=49152, rope_theta=10000.0,
+    tie_embeddings=True,
+    policy="fsdp",           # 15 heads do not divide tp=16 -> 2-D DP/FSDP policy
+    supports_long_context=False,  # pure full attention -> long_500k skipped
+    source="hf:HuggingFaceTB/SmolLM-135M; hf",
+))

@@ -1,0 +1,12 @@
+"""Cloud²Sim core: the paper's contribution as composable JAX modules.
+
+  partition    PartitionUtil + 271-virtual-shard consistent partition table
+  grid         DataGrid — the in-memory data grid over a device mesh
+  executor     DistributedExecutor — logic-to-data shard_map execution
+  mapreduce    dual-backend (hazelcast/infinispan) MapReduce engine
+  health       HealthMonitor (Algorithm 4 signals)
+  elastic      AdaptiveScalerProbe / IntelligentAdaptiveScaler (Algs 5-6)
+  coordinator  multi-tenant Coordinator
+  speedup      analytical model, Eqs (3.1)-(3.11)
+  cloudsim     the distributed DES cloud simulator (RR + matchmaking brokers)
+"""

@@ -1,0 +1,251 @@
+"""Concurrent & distributed cloud (DES) simulator — the thesis's CloudSim side.
+
+Entity model (struct-of-arrays, stored in the DataGrid as the thesis stores
+them in Hazelcast IMaps): Datacenters ⊃ Hosts ⊃ VMs ⊂ Cloudlets.  Brokers:
+
+  * RoundRobinBroker      — cloudlet i → VM (i mod V)           (§5.1.1)
+  * MatchmakingBroker     — fair matchmaking (Raman et al.): each cloudlet
+    requires a minimal VM size f(length); it binds to an adequate VM while
+    *not* overloading the large VMs — among adequate candidates the broker
+    round-robins by cloudlet index (§5.1.2).
+
+Execution phases, mirroring §3.4.1.2 / Fig 3.10:
+  1. create entities          (distributed: partitions created shard-locally)
+  2. schedule (broker)        (distributed: matchmaking over local partitions,
+                               VM table replicated — executeOnKeyOwner)
+  3. cloudlet workloads       (distributed: the ``isLoaded`` real compute)
+  4. core event simulation    (master-only: time-shared completion waves —
+                               "tightly coupled core fragments are not
+                               distributed", §4 summary)
+Outputs are bit-identical regardless of the number of members (tests assert
+the thesis's accuracy claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.executor import DistributedExecutor
+from repro.core.grid import DataGrid
+from repro.core.partition import pad_to_shards
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulationConfig:
+    n_datacenters: int = 15
+    n_hosts: int = 60
+    n_vms: int = 200
+    n_cloudlets: int = 400
+    vm_mips_range: tuple = (500.0, 2000.0)
+    cloudlet_mi_range: tuple = (1000.0, 50000.0)   # million instructions
+    broker: str = "round_robin"                    # | "matchmaking"
+    is_loaded: bool = False                        # attach a real workload
+    workload_dim: int = 64                         # loaded-matmul size
+    workload_iters_per_gmi: float = 2.0            # iterations per 1000 MI
+    seed: int = 42
+
+
+# ----------------------------------------------------------------- entities
+
+def create_entities(cfg: SimulationConfig, grid: DataGrid) -> Dict[str, jax.Array]:
+    """Create datacenters/hosts/VMs/cloudlets into the data grid (padded so
+    every member owns an equal partition, per PartitionUtil)."""
+    n = grid.n_members
+    key = jax.random.PRNGKey(cfg.seed)
+    k1, k2 = jax.random.split(key)
+    V = pad_to_shards(cfg.n_vms, n)
+    C = pad_to_shards(cfg.n_cloudlets, n)
+
+    lo, hi = cfg.vm_mips_range
+    vm_mips = jax.random.uniform(k1, (V,), minval=lo, maxval=hi)
+    vm_mips = jnp.where(jnp.arange(V) < cfg.n_vms, vm_mips, 0.0)
+    vm_host = jnp.arange(V, dtype=jnp.int32) % max(cfg.n_hosts, 1)
+
+    lo, hi = cfg.cloudlet_mi_range
+    cl_mi = jax.random.uniform(k2, (C,), minval=lo, maxval=hi)
+    cl_valid = jnp.arange(C) < cfg.n_cloudlets
+    cl_mi = jnp.where(cl_valid, cl_mi, 0.0)
+
+    grid.put("vm_mips", vm_mips)
+    grid.put("vm_host", vm_host)
+    grid.put("cloudlet_mi", cl_mi)
+    grid.put("cloudlet_valid", cl_valid)
+    return {"vm_mips": vm_mips, "vm_host": vm_host, "cloudlet_mi": cl_mi,
+            "cloudlet_valid": cl_valid, "n_vms": cfg.n_vms,
+            "n_cloudlets": cfg.n_cloudlets}
+
+
+# ------------------------------------------------------------------ brokers
+
+def round_robin_assign(local_ids, n_vms: int):
+    return (local_ids % n_vms).astype(jnp.int32)
+
+
+def matchmaking_assign(local_ids, local_mi, vm_mips, n_vms: int):
+    """Fair matchmaking over the (replicated) VM table for a local partition.
+
+    required(cl) = mi-proportional minimal MIPS; candidates = VMs with
+    mips >= required; bind to the (id mod n_candidates)-th smallest adequate
+    VM — best-fit with round-robin fairness (no overloading the largest VMs).
+    """
+    mips_valid = vm_mips[:n_vms]
+    order = jnp.argsort(mips_valid)                      # ascending by size
+    sorted_mips = mips_valid[order]
+    max_mi = 50000.0
+    required = local_mi / max_mi * (sorted_mips[-1] * 0.9)
+    first_ok = jnp.searchsorted(sorted_mips, required)   # (c,)
+    first_ok = jnp.minimum(first_ok, n_vms - 1)
+    n_cand = n_vms - first_ok
+    pick = first_ok + (local_ids % n_cand)
+    return order[pick].astype(jnp.int32)
+
+
+def schedule(cfg: SimulationConfig, grid: DataGrid,
+             executor: DistributedExecutor) -> jax.Array:
+    """Distributed scheduling: each member matches its cloudlet partition."""
+    C = grid.get("cloudlet_mi").shape[0]
+    ids = jnp.arange(C, dtype=jnp.int32)
+    mi = grid.get("cloudlet_mi")
+    vm_mips = grid.replicate("vm_mips")                  # near-cache the VM table
+
+    if cfg.broker == "round_robin":
+        fn = lambda data, vm: round_robin_assign(data[0], cfg.n_vms)
+    else:
+        fn = lambda data, vm: matchmaking_assign(data[0], data[1], vm,
+                                                 cfg.n_vms)
+    assign = executor.execute_on_key_owners(fn, (ids, mi),
+                                            replicated_args=(vm_mips,))
+    grid.put("cloudlet_vm", assign)
+    return assign
+
+
+# ----------------------------------------------------------------- workloads
+
+def _one_workload(mi, dim: int, iters: int):
+    """The ``isLoaded`` cloudlet payload: real (distributable) compute whose
+    size scales with the cloudlet length."""
+    a = (jnp.ones((dim, dim), jnp.float32) * (mi / 50000.0) +
+         jnp.eye(dim, dtype=jnp.float32))
+
+    def body(_, m):
+        return jnp.tanh(m @ a) * 0.5 + a * 0.1
+
+    out = jax.lax.fori_loop(0, iters, body, a)
+    return jnp.sum(out)
+
+
+def run_workloads(cfg: SimulationConfig, grid: DataGrid,
+                  executor: DistributedExecutor) -> jax.Array:
+    mi = grid.get("cloudlet_mi")
+    iters = int(cfg.workload_iters_per_gmi *
+                (cfg.cloudlet_mi_range[1] / 1000.0))
+
+    def member(local_mi):
+        return jax.vmap(lambda m: _one_workload(m, cfg.workload_dim, iters))(
+            local_mi)
+
+    checks = executor.execute_on_key_owners(member, mi)
+    grid.put("workload_checksum", checks)
+    return checks
+
+
+# ------------------------------------------------- core DES (master instance)
+
+def simulate_completion(vm_assign, cloudlet_mi, vm_mips, valid):
+    """Time-shared completion waves (CloudletSchedulerTimeShared).
+
+    Event loop: between consecutive completions every active cloudlet on VM v
+    progresses at mips_v / active_v.  Returns (finish_times, makespan).
+    Pure JAX while_loop — one iteration per completion wave.
+    """
+    C = cloudlet_mi.shape[0]
+    V = vm_mips.shape[0]
+    remaining = jnp.where(valid, cloudlet_mi, 0.0)
+    finish = jnp.zeros((C,), jnp.float32)
+    onehot_vm = jax.nn.one_hot(vm_assign, V, dtype=jnp.float32)
+
+    def cond(state):
+        remaining, _, _ = state
+        return jnp.any(remaining > 1e-6)
+
+    def body(state):
+        remaining, finish, now = state
+        active = remaining > 1e-6
+        counts = (active.astype(jnp.float32))[None, :] @ onehot_vm  # (1,V)
+        counts = counts[0]
+        rate_vm = jnp.where(counts > 0, vm_mips / jnp.maximum(counts, 1.0), 0.0)
+        rate = (onehot_vm @ rate_vm) * active                        # (C,)
+        tte = jnp.where(active & (rate > 0), remaining / rate, jnp.inf)
+        dt = jnp.min(tte)
+        dt = jnp.where(jnp.isfinite(dt), dt, 0.0)
+        new_remaining = jnp.maximum(remaining - rate * dt, 0.0)
+        just_done = active & (new_remaining <= 1e-6)
+        finish = jnp.where(just_done, now + dt, finish)
+        # guard: if nothing progresses (all rates 0), zero out to terminate
+        stalled = (dt <= 0) & active & (rate <= 0)
+        new_remaining = jnp.where(stalled, 0.0, new_remaining)
+        return new_remaining, finish, now + dt
+
+    _, finish, makespan = jax.lax.while_loop(
+        cond, body, (remaining, finish, jnp.float32(0.0)))
+    return finish, makespan
+
+
+# ----------------------------------------------------------------- full run
+
+@dataclasses.dataclass
+class SimulationResult:
+    vm_assign: np.ndarray
+    finish_times: np.ndarray
+    makespan: float
+    workload_checksum: Optional[np.ndarray]
+    timings: Dict[str, float]
+
+    def summary(self) -> Dict[str, float]:
+        return {"makespan": float(self.makespan),
+                "mean_finish": float(self.finish_times.mean()),
+                **{f"t_{k}": v for k, v in self.timings.items()}}
+
+
+def run_simulation(cfg: SimulationConfig, mesh: Mesh,
+                   backup_count: int = 0) -> SimulationResult:
+    grid = DataGrid(mesh, backup_count=backup_count)
+    executor = DistributedExecutor(mesh)
+    timings = {}
+
+    t0 = time.perf_counter()
+    ents = create_entities(cfg, grid)
+    jax.block_until_ready(grid.get("cloudlet_mi"))
+    timings["create"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    assign = schedule(cfg, grid, executor)
+    jax.block_until_ready(assign)
+    timings["schedule"] = time.perf_counter() - t0
+
+    checks = None
+    if cfg.is_loaded:
+        t0 = time.perf_counter()
+        checks = run_workloads(cfg, grid, executor)
+        jax.block_until_ready(checks)
+        timings["workload"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    finish, makespan = jax.jit(simulate_completion)(
+        assign, grid.get("cloudlet_mi"), grid.get("vm_mips"),
+        grid.get("cloudlet_valid"))
+    jax.block_until_ready(finish)
+    timings["core_sim"] = time.perf_counter() - t0
+
+    grid.clear()   # clearDistributedObjects()
+    return SimulationResult(
+        vm_assign=np.asarray(assign), finish_times=np.asarray(finish),
+        makespan=float(makespan),
+        workload_checksum=None if checks is None else np.asarray(checks),
+        timings=timings)

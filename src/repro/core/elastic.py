@@ -1,0 +1,126 @@
+"""Adaptive scaling — Algorithms 4, 5, 6 of the thesis, ported structurally.
+
+* ``DynamicScaler``      = Algorithm 4 (threshold loop + waiting buffers).
+* ``AdaptiveScalerProbe``= Algorithm 5 (publishes scale-out/in flags into the
+                           shared health map, one entry per tenant).
+* ``IntelligentAdaptiveScaler`` (IAS) = Algorithm 6 (reads the flags, takes an
+                           *atomic* decision — exactly one actor scales — with
+                           a ``timeBetweenScalingDecisions`` buffer, 0-or-1
+                           spawned instance per node).
+
+The TPU adaptation (DESIGN.md §2): membership cannot change mid-``jit``, so a
+scaling decision is *applied at a step boundary* by the ``ElasticController``:
+checkpoint → rebuild mesh with the new data extent → re-shard → resume.  The
+atomic IAtomicLong flag becomes a single-controller decision (process 0),
+which is the sound SPMD equivalent (and immune to the split-brain failures
+the thesis reports in §4.3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Dict, List, Optional
+
+from repro.core.health import HealthConfig, HealthMonitor
+
+TERMINATE_ALL_FLAG = -999   # the thesis's shutdown sentinel
+
+
+class Decision(enum.IntEnum):
+    SCALE_IN = -1
+    NONE = 0
+    SCALE_OUT = 1
+
+
+@dataclasses.dataclass
+class ScalerState:
+    n_instances: int
+    last_scale_step: int = -10 ** 9
+    key: int = 0                      # the IAtomicLong flag (0 = idle)
+    history: List = dataclasses.field(default_factory=list)
+
+
+class AdaptiveScalerProbe:
+    """Algorithm 5: translate health threshold crossings into flags in the
+    (per-tenant) node-health map."""
+
+    def __init__(self, cfg: HealthConfig):
+        self.cfg = cfg
+        self.node_health: Dict[str, bool] = {"toScaleOut": False,
+                                             "toScaleIn": False}
+
+    def probe(self, monitor: HealthMonitor, n_instances: int) -> None:
+        load = monitor.load()
+        if load >= self.cfg.max_threshold and n_instances < self.cfg.max_instances:
+            self.node_health["toScaleOut"] = True
+            self.node_health["toScaleIn"] = False
+        elif load <= self.cfg.min_threshold and n_instances > self.cfg.min_instances:
+            self.node_health["toScaleIn"] = True
+            self.node_health["toScaleOut"] = False
+
+
+class IntelligentAdaptiveScaler:
+    """Algorithm 6: atomically turn flags into exactly one scaling action."""
+
+    def __init__(self, cfg: HealthConfig, n_instances: int):
+        self.cfg = cfg
+        self.state = ScalerState(n_instances=n_instances)
+
+    def decide(self, probe: AdaptiveScalerProbe, step: int) -> Decision:
+        st = self.state
+        # waiting buffer: prevents cascaded scaling / jitter (paper §4.3.1)
+        if step - st.last_scale_step < self.cfg.time_between_scaling:
+            return Decision.NONE
+        if probe.node_health["toScaleOut"]:
+            probe.node_health["toScaleOut"] = False
+            if st.key == 0:                         # atomic get-and-set
+                st.key = 1
+                st.n_instances = min(st.n_instances * 2,
+                                     self.cfg.max_instances)
+                st.last_scale_step = step
+                st.history.append((step, "out", st.n_instances))
+                st.key = 0
+                return Decision.SCALE_OUT
+        elif probe.node_health["toScaleIn"]:
+            probe.node_health["toScaleIn"] = False
+            if st.key == 0:
+                st.key = -1
+                st.n_instances = max(st.n_instances // 2,
+                                     self.cfg.min_instances)
+                st.last_scale_step = step
+                st.history.append((step, "in", st.n_instances))
+                st.key = 0
+                return Decision.SCALE_IN
+        return Decision.NONE
+
+
+class ElasticController:
+    """Step-boundary elasticity: monitor → probe → IAS → re-mesh callback.
+
+    ``remesh_fn(new_n_instances)`` is supplied by the runner (training: save a
+    checkpoint, rebuild the mesh with the new data-axis extent, re-shard the
+    state, resume — see repro/train/elastic_runner.py).
+    """
+
+    def __init__(self, cfg: HealthConfig, n_instances: int,
+                 remesh_fn: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.monitor = HealthMonitor(cfg)
+        self.probe = AdaptiveScalerProbe(cfg)
+        self.ias = IntelligentAdaptiveScaler(cfg, n_instances)
+        self.remesh_fn = remesh_fn
+
+    @property
+    def n_instances(self) -> int:
+        return self.ias.state.n_instances
+
+    def on_step(self, sample) -> Decision:
+        self.monitor.observe(sample)
+        if sample.step % self.cfg.time_between_health_checks:
+            return Decision.NONE
+        before = self.ias.state.n_instances
+        self.probe.probe(self.monitor, before)
+        decision = self.ias.decide(self.probe, sample.step)
+        if decision != Decision.NONE and self.remesh_fn is not None:
+            self.remesh_fn(self.ias.state.n_instances)
+        return decision

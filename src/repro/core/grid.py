@@ -1,0 +1,112 @@
+"""DataGrid — the in-memory data grid (Hazelcast IMap) as sharded jax Arrays.
+
+A grid holds named arrays with explicit shardings over a mesh.  Fidelity map:
+
+  IMap.put/get            -> put(name, value, spec) / get(name)
+  BINARY vs OBJECT format -> dtype policy (bf16 "wire" vs f32 "object")
+  synchronous backup      -> backup(name): neighbor-shifted replica
+                             (jnp.roll along the sharded axis ≈ Hazelcast
+                             placing backups on a different member)
+  member crash + recovery -> restore_from_backup(name, lost_shard)
+  near-cache              -> replicate(name): fully-replicated copy
+
+The grid is the storage substrate of the DES simulator and the MapReduce
+engine; training state uses the same principle via NamedSharding directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class GridEntry:
+    value: jax.Array
+    spec: P
+    backup: Optional[jax.Array] = None
+    in_memory_format: str = "OBJECT"   # OBJECT=f32, BINARY=bf16
+
+
+class DataGrid:
+    def __init__(self, mesh: Mesh, axis: str = "data", backup_count: int = 0):
+        self.mesh = mesh
+        self.axis = axis
+        self.backup_count = backup_count
+        self._store: Dict[str, GridEntry] = {}
+
+    @property
+    def n_members(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def _sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def put(self, name: str, value, spec: Optional[P] = None,
+            in_memory_format: str = "OBJECT"):
+        value = jnp.asarray(value)
+        if in_memory_format == "BINARY" and value.dtype == jnp.float32:
+            value = value.astype(jnp.bfloat16)  # serialized wire format
+        if spec is None:
+            spec = P(self.axis, *([None] * (value.ndim - 1)))
+        value = jax.device_put(value, self._sharding(spec))
+        entry = GridEntry(value, spec, in_memory_format=in_memory_format)
+        if self.backup_count > 0:
+            entry.backup = self._make_backup(value)
+        self._store[name] = entry
+        return value
+
+    def get(self, name: str) -> jax.Array:
+        return self._store[name].value
+
+    def spec(self, name: str) -> P:
+        return self._store[name].spec
+
+    def keys(self):
+        return sorted(self._store)
+
+    def remove(self, name: str):
+        self._store.pop(name, None)
+
+    def clear(self):
+        """clearDistributedObjects() — end-of-simulation cleanup."""
+        self._store.clear()
+
+    # ------------------------------------------------------------- backups
+    def _make_backup(self, value: jax.Array) -> jax.Array:
+        """Synchronous backup: every member stores its *neighbor's* shard
+        (shift by one shard along the partitioned axis)."""
+        n = self.n_members
+        if value.shape[0] % n != 0 or n == 1:
+            return value  # degenerate: replicate
+        shard = value.shape[0] // n
+        return jnp.roll(value, shard, axis=0)
+
+    def restore_from_backup(self, name: str, lost_member: int) -> jax.Array:
+        """Recover a member's shard from the neighbor backup (fail-over)."""
+        e = self._store[name]
+        if e.backup is None:
+            raise RuntimeError(f"no synchronous backup for {name!r}")
+        n = self.n_members
+        shard = e.value.shape[0] // n
+        lo = lost_member * shard
+        val = np.asarray(e.value).copy()
+        # backup = roll(value, +shard): member m+1 holds m's shard; unroll it.
+        unrolled = np.roll(np.asarray(e.backup), -shard, axis=0)
+        val[lo:lo + shard] = unrolled[lo:lo + shard]
+        out = jax.device_put(jnp.asarray(val), self._sharding(e.spec))
+        self._store[name] = dataclasses.replace(e, value=out)
+        return out
+
+    def replicate(self, name: str) -> jax.Array:
+        """Near-cache: a fully-replicated copy (memory for latency)."""
+        e = self._store[name]
+        return jax.device_put(e.value, self._sharding(P(*([None] * e.value.ndim))))
+
+    def total_bytes(self) -> int:
+        return sum(int(e.value.size * e.value.dtype.itemsize)
+                   for e in self._store.values())

@@ -1,0 +1,80 @@
+"""HealthMonitor — §4.3.1, TPU-runtime-adapted.
+
+The thesis monitors process/system CPU load via OperatingSystemMXBean and
+notifies the scaler on threshold crossings.  The training-runtime analogues we
+monitor per step: wall-clock step time, throughput (tokens/s), a *load*
+metric (observed step time / target step time — directly comparable to the
+paper's process CPU load in [0,1+]), gradient-norm spikes, NaN/Inf (the
+"member crash" signal), and straggler skew across members.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class HealthConfig:
+    max_threshold: float = 0.80       # scale OUT above (paper: maxThreshold)
+    min_threshold: float = 0.20       # scale IN  below (paper: minThreshold)
+    time_between_health_checks: int = 1    # steps between checks
+    time_between_scaling: int = 10          # hysteresis buffer (anti-jitter)
+    max_instances: int = 64                 # maxInstancesToBeSpawned
+    min_instances: int = 1
+    window: int = 8                         # smoothing window
+    target_step_time: float = 1.0           # defines load = step_time/target
+    nan_is_fatal: bool = True
+
+
+@dataclasses.dataclass
+class HealthSample:
+    step: int
+    step_time: float
+    tokens_per_s: float = 0.0
+    grad_norm: float = 0.0
+    loss: float = 0.0
+    member_times: Optional[List[float]] = None  # per-member (straggler skew)
+
+
+class HealthMonitor:
+    def __init__(self, cfg: HealthConfig):
+        self.cfg = cfg
+        self.samples: Deque[HealthSample] = deque(maxlen=256)
+        self.events: List[str] = []
+
+    # ------------------------------------------------------------- observe
+    def observe(self, sample: HealthSample) -> None:
+        self.samples.append(sample)
+        if not math.isfinite(sample.loss) or not math.isfinite(sample.grad_norm):
+            self.events.append(f"step {sample.step}: NON-FINITE "
+                               f"(loss={sample.loss}, gnorm={sample.grad_norm})")
+
+    # --------------------------------------------------------------- views
+    def load(self) -> float:
+        """Smoothed load in [0, inf): step_time / target (≈ process CPU load)."""
+        w = [s.step_time for s in list(self.samples)[-self.cfg.window:]]
+        if not w:
+            return 0.0
+        return (sum(w) / len(w)) / self.cfg.target_step_time
+
+    def straggler_skew(self) -> float:
+        """max/median member time of the newest sample (straggler signal)."""
+        if not self.samples or not self.samples[-1].member_times:
+            return 1.0
+        ts = sorted(self.samples[-1].member_times)
+        med = ts[len(ts) // 2]
+        return (ts[-1] / med) if med > 0 else 1.0
+
+    def is_healthy(self) -> bool:
+        if not self.samples:
+            return True
+        s = self.samples[-1]
+        return math.isfinite(s.loss) and math.isfinite(s.grad_norm)
+
+    def summary(self) -> Dict[str, float]:
+        return {"load": self.load(), "skew": self.straggler_skew(),
+                "n_samples": float(len(self.samples)),
+                "healthy": float(self.is_healthy())}

@@ -1,0 +1,120 @@
+"""MapReduce engine — the paper's dual-backend MapReduce layer (§3.4.2, §4.2).
+
+Cloud²Sim implements the SAME job API over Hazelcast and Infinispan and
+benchmarks them against each other (Figs 5.9–5.11).  We keep that design:
+
+  backend="hazelcast"   explicit shard_map: map() runs on each member's local
+                        chunk, reduce() is an explicit collective (psum) —
+                        the member-owned, logic-to-data execution model.
+  backend="infinispan"  pjit/auto-SPMD: the same job expressed as a global
+                        computation; the partitioner chooses the schedule
+                        (Infinispan's "local-first cache" flavor).
+
+Jobs follow the paper's default example: word count over a corpus of files.
+``map_invocations`` = number of files (leading shard dim); ``reduce
+invocations`` = number of distinct keys touched (vocab bins), matching how the
+thesis scales its experiments (§4.2.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+
+@dataclasses.dataclass(frozen=True)
+class MapReduceJob:
+    """map_fn: (file_chunk) -> partial aggregate; combine: pairwise reduce."""
+    map_fn: Callable
+    n_keys: int                     # size of the reduced key space
+    name: str = "job"
+
+
+def word_count_job(vocab: int, use_kernel: bool = False) -> MapReduceJob:
+    """The paper's default word-count application: counts token occurrences.
+
+    use_kernel: route the per-shard histogram through the Pallas histogram
+    kernel (interpret mode on CPU) instead of the jnp one-hot path.
+    """
+    if use_kernel:
+        from repro.kernels.histogram import ops as hist_ops
+        fn = lambda chunk: hist_ops.histogram(chunk.reshape(-1), vocab)
+    else:
+        def fn(chunk):
+            flat = chunk.reshape(-1)
+            return jnp.zeros((vocab,), jnp.int32).at[flat].add(
+                jnp.ones_like(flat), mode="drop")
+    return MapReduceJob(map_fn=fn, n_keys=vocab, name="word_count")
+
+
+class MapReduceEngine:
+    def __init__(self, mesh: Mesh, backend: str = "hazelcast",
+                 axis: str = "data", verbose: bool = False):
+        assert backend in ("hazelcast", "infinispan")
+        self.mesh = mesh
+        self.backend = backend
+        self.axis = axis
+        self.verbose = verbose
+
+    def run(self, job: MapReduceJob, files: jax.Array):
+        """files: (n_files, file_len) int tokens; n_files % members == 0."""
+        if self.backend == "hazelcast":
+            out = self._run_hazelcast(job, files)
+        else:
+            out = self._run_infinispan(job, files)
+        return out
+
+    # -------- hazelcast backend: explicit member-local map + collective reduce
+    def _run_hazelcast(self, job: MapReduceJob, files):
+        axis = self.axis
+        verbose = self.verbose
+
+        def member(local_files):
+            # map(): one invocation per local file
+            partial = jax.vmap(job.map_fn)(local_files).sum(axis=0)
+            if verbose:
+                jax.debug.print(
+                    "[member] mapped {} files locally", local_files.shape[0])
+            # reduce(): collective combine of partial aggregates
+            return jax.lax.psum(partial, axis)
+
+        f = shard_map(member, mesh=self.mesh, in_specs=(P(axis),),
+                      out_specs=P(), check_vma=False)
+        return jax.jit(f)(files)
+
+    # -------- infinispan backend: global expression, auto-SPMD partitioning
+    def _run_infinispan(self, job: MapReduceJob, files):
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        files = jax.device_put(files, sharding)
+
+        def global_job(fs):
+            return jax.vmap(job.map_fn)(fs).sum(axis=0)
+
+        return jax.jit(global_job, in_shardings=(sharding,),
+                       out_shardings=NamedSharding(self.mesh, P()))(files)
+
+    def benchmark(self, job: MapReduceJob, files, repeats: int = 3):
+        """Timed run (compile excluded) -> (result, seconds)."""
+        out = self.run(job, files)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = self.run(job, files)
+        jax.block_until_ready(out)
+        return out, (time.perf_counter() - t0) / repeats
+
+
+def make_corpus(n_files: int, file_len: int, vocab: int, seed: int = 0,
+                zipf_a: float = 1.3) -> np.ndarray:
+    """USENET-like corpus: zipf-distributed token ids (the thesis used large
+    text files from the Westbury USENET corpus)."""
+    rng = np.random.default_rng(seed)
+    toks = rng.zipf(zipf_a, size=(n_files, file_len)).astype(np.int64)
+    return (toks % vocab).astype(np.int32)

@@ -1,0 +1,93 @@
+"""PartitionUtil — the paper's partitioning machinery (§4.1.3), TPU-adapted.
+
+Cloud²Sim tracks each distributed data structure with per-instance ID ranges
+computed from an instance *offset* (``getPartitionInit``/``getPartitionFinal``,
+ported verbatim below), and hashes keys onto 271 virtual partitions
+(``hash(key) % 271``) that are re-balanced when instances join/leave.  Here the
+"instances" are mesh devices (or data-axis shards) and the virtual partitions
+make elastic re-sharding cheap: when the shard count changes, only the moved
+virtual partitions' data re-homes (consistent-hashing property).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import numpy as np
+
+DEFAULT_PARTITION_COUNT = 271  # Hazelcast's default, kept for fidelity
+
+
+def get_partition_init(no_of_params: int, offset: int, n_instances: int) -> int:
+    """Initial ID of instance ``offset``'s partition (paper §4.1.3; clipped so
+    surplus members get empty partitions when members > items)."""
+    return min(int(offset * math.ceil(no_of_params / float(n_instances))),
+               no_of_params)
+
+
+def get_partition_final(no_of_params: int, offset: int, n_instances: int) -> int:
+    """Final (exclusive) ID of instance ``offset``'s partition (paper §4.1.3)."""
+    temp = int((offset + 1) * math.ceil(no_of_params / float(n_instances)))
+    return temp if temp < no_of_params else no_of_params
+
+
+def partition_ranges(no_of_params: int, n_instances: int) -> List[Tuple[int, int]]:
+    return [(get_partition_init(no_of_params, i, n_instances),
+             get_partition_final(no_of_params, i, n_instances))
+            for i in range(n_instances)]
+
+
+def key_partition(key: int, partition_count: int = DEFAULT_PARTITION_COUNT) -> int:
+    """hash(key) % partitionCount — Hazelcast's data partition table."""
+    return hash(key) % partition_count
+
+
+@dataclasses.dataclass
+class PartitionTable:
+    """Virtual-shard table: 271 partitions -> owner instance.
+
+    ``rebalance(n)`` reassigns with minimal movement (partitions keep their
+    owner when possible — the paper's "minimal reshuffling of objects when a
+    new instance joins").
+    """
+    partition_count: int = DEFAULT_PARTITION_COUNT
+    n_instances: int = 1
+
+    def __post_init__(self):
+        self.owner = np.arange(self.partition_count) % self.n_instances
+
+    def owner_of(self, key: int) -> int:
+        return int(self.owner[key_partition(key, self.partition_count)])
+
+    def rebalance(self, n_instances: int) -> int:
+        """Returns the number of virtual partitions that moved (kept minimal:
+        only partitions on departed or overfull members re-home)."""
+        counts = np.bincount(self.owner[self.owner < n_instances],
+                             minlength=n_instances)
+        moved = 0
+        # 1) re-home partitions of departed members
+        for p in range(self.partition_count):
+            if self.owner[p] >= n_instances:
+                new_o = int(np.argmin(counts))
+                self.owner[p] = new_o
+                counts[new_o] += 1
+                moved += 1
+        # 2) level: move from the fullest to the emptiest until balanced
+        while counts.max() - counts.min() > 1:
+            src, dst = int(np.argmax(counts)), int(np.argmin(counts))
+            p = int(np.nonzero(self.owner == src)[0][0])
+            self.owner[p] = dst
+            counts[src] -= 1
+            counts[dst] += 1
+            moved += 1
+        self.n_instances = n_instances
+        return moved
+
+    def load(self) -> np.ndarray:
+        return np.bincount(self.owner, minlength=self.n_instances)
+
+
+def pad_to_shards(n: int, shards: int) -> int:
+    """Global length padded so every shard holds an equal slice."""
+    return ((n + shards - 1) // shards) * shards

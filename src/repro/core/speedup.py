@@ -1,0 +1,101 @@
+"""Analytical speedup/performance model — thesis §3.3, Eqs (3.1)–(3.11).
+
+    T_n = k·T_1/n + (1−k)·T_1 + S + C + γ + F − θ            (3.1/3.6)
+    S_n = T_1 / T_n                                          (3.7)
+    E_n = S_n / n                                            (3.8)
+    P   = (1 − 1/S_n)·100                                    (3.10)
+
+with S = f1(s) serialization, C = f2(n,d,w,s) communication, γ = f3(n,d,w)
+coordination, F fixed costs and θ = f4(N) the data-grid resource gain.
+
+For the TPU port the terms are *measurable from the dry-run roofline*:
+  S  -> re-shard/cast bytes ÷ HBM bandwidth
+  C  -> collective bytes ÷ link bandwidth (grows with n via the comm term)
+  γ  -> per-hop collective latency × collective count
+  F  -> dispatch/launch overhead per step
+  θ  -> HBM-fit gain (paging/spill avoided once the working set fits n·HBM)
+
+The model reproduces the thesis's four scalability regimes (§5.1.1):
+positive, negative (coordination-heavy), positive-then-negative (common), and
+complex borderline — see benchmarks/speedup_model.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeedupModel:
+    t1: float                 # serial time T_1 (s)
+    k: float                  # distributable fraction of the code
+    s_cost: float = 0.0       # S: serialization (independent of n)
+    c_per_n: float = 0.0      # C: communication cost slope in n
+    c_size: float = 0.0       # C: size-dependent communication component
+    gamma_per_n: float = 0.0  # γ: coordination slope in n
+    fixed: float = 0.0        # F
+    theta_fn: Callable[[int], float] = staticmethod(lambda n_nodes: 0.0)
+
+    def t_n(self, n: int, n_nodes: int = None) -> float:
+        """Eq. 3.6 — predicted distributed time on n instances."""
+        if n <= 1:
+            return self.t1
+        n_nodes = n if n_nodes is None else n_nodes
+        comm = self.c_per_n * (n - 1) + self.c_size
+        coord = self.gamma_per_n * (n - 1)
+        theta = self.theta_fn(n_nodes)
+        return (self.k * self.t1 / n + (1 - self.k) * self.t1 +
+                self.s_cost + comm + coord + self.fixed - theta)
+
+    def speedup(self, n: int) -> float:
+        return self.t1 / self.t_n(n)                          # Eq. 3.7
+
+    def efficiency(self, n: int) -> float:
+        return self.speedup(n) / n                            # Eq. 3.8
+
+    def improvement_pct(self, n: int) -> float:
+        return (1.0 - 1.0 / self.speedup(n)) * 100.0          # Eq. 3.10
+
+    def curve(self, ns: List[int]) -> List[float]:
+        return [self.t_n(n) for n in ns]
+
+    def regime(self, ns: List[int]) -> str:
+        """Classify into the thesis's §5.1.1 scalability cases."""
+        ts = self.curve(ns)
+        diffs = [b - a for a, b in zip(ts, ts[1:])]
+        signs = [d < 0 for d in diffs]
+        if all(signs):
+            return "positive"
+        if not any(signs):
+            return "negative"
+        # count sign changes
+        changes = sum(1 for a, b in zip(signs, signs[1:]) if a != b)
+        if changes == 1 and signs[0]:
+            return "positive-then-negative"
+        return "complex"
+
+
+def model_from_roofline(t1: float, k: float, *, coll_bytes_per_step: float,
+                        link_bw: float = 50e9, hops: int = 1,
+                        latency_per_hop: float = 1e-6, n_collectives: int = 0,
+                        reshard_bytes: float = 0.0, hbm_bw: float = 819e9,
+                        fixed: float = 50e-6,
+                        working_set_bytes: float = 0.0,
+                        hbm_per_node: float = 16 * 2 ** 30) -> SpeedupModel:
+    """Wire Eq. 3.6's terms to dry-run measurables (DESIGN.md §2)."""
+    def theta(n_nodes: int) -> float:
+        # resource gain: once the working set fits in n·HBM, spill vanishes
+        if working_set_bytes <= 0:
+            return 0.0
+        if n_nodes * hbm_per_node >= working_set_bytes:
+            return 0.15 * t1      # spill/paging penalty recovered
+        return 0.0
+
+    return SpeedupModel(
+        t1=t1, k=k,
+        s_cost=reshard_bytes / hbm_bw,
+        c_per_n=(coll_bytes_per_step / link_bw) * 0.05,
+        c_size=coll_bytes_per_step / link_bw,
+        gamma_per_n=latency_per_hop * max(n_collectives, 0) * hops,
+        fixed=fixed, theta_fn=theta)

@@ -1,0 +1,106 @@
+"""Data pipeline: deterministic synthetic LM stream + MapReduce-backed corpus.
+
+Determinism contract (fault tolerance): batch ``i`` depends only on
+``(seed, i)`` via ``fold_in`` — a restarted or re-scaled job resumes from its
+``data_cursor`` and sees byte-identical data regardless of the member count
+(the thesis's "output consistent as if simulating in a single instance").
+
+The word-count corpus path feeds the MapReduce engine (the paper's default
+job) and doubles as a frequency-calibrated sampler: batches are drawn from
+the empirical token distribution that MapReduce computed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+
+
+def synthetic_batch(cfg_data: DataConfig, step: int, model_cfg=None) -> Dict:
+    """Markov-ish synthetic tokens: learnable structure (loss can fall)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg_data.seed), step)
+    B, S, V = cfg_data.global_batch, cfg_data.seq_len, cfg_data.vocab_size
+    k1, k2 = jax.random.split(key)
+    base = jax.random.randint(k1, (B, S + 1), 0, V)
+    # inject learnable bigram structure: every odd position copies prev+1
+    pos = jnp.arange(S + 1)
+    shifted = jnp.roll(base, 1, axis=1) + 1
+    toks = jnp.where((pos % 2 == 1)[None, :], shifted % V, base)
+    batch = {"tokens": toks[:, :-1].astype(jnp.int32),
+             "labels": toks[:, 1:].astype(jnp.int32),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if model_cfg is not None:
+        batch = adapt_batch_for_arch(batch, model_cfg, key=k2)
+    return batch
+
+
+def adapt_batch_for_arch(batch, cfg, key=None):
+    """Attach frontend-stub inputs (patch/frame embeddings) per the arch."""
+    B, S = batch["labels"].shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.frontend == "vision_stub":
+        n = cfg.frontend_tokens
+        batch = dict(batch)
+        batch["tokens"] = batch["tokens"][:, : S - n]
+        batch["patches"] = jax.random.normal(key, (B, n, cfg.frontend_dim),
+                                             jnp.float32)
+        mask = batch["mask"].at[:, :n].set(0.0)   # no loss on patch positions
+        batch["mask"] = mask
+    elif cfg.is_encdec:
+        batch = dict(batch)
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.frontend_dim),
+                                            jnp.float32)
+    return batch
+
+
+class DataPipeline:
+    """Cursor-addressable batch source with shard placement."""
+
+    def __init__(self, cfg_data: DataConfig, model_cfg=None, sharding=None):
+        self.cfg = cfg_data
+        self.model_cfg = model_cfg
+        self.sharding = sharding
+        self.cursor = 0
+
+    def at(self, step: int) -> Dict:
+        b = synthetic_batch(self.cfg, step, self.model_cfg)
+        if self.sharding is not None:
+            b = {k: jax.device_put(v, self.sharding.get(k))
+                 if self.sharding.get(k) is not None else v
+                 for k, v in b.items()}
+        return b
+
+    def __iter__(self) -> Iterator[Dict]:
+        while True:
+            yield self.at(self.cursor)
+            self.cursor += 1
+
+
+def corpus_calibrated_stream(mesh, n_files=8, file_len=4096, vocab=1024,
+                             backend="hazelcast", use_kernel=False):
+    """Word-count-driven pipeline: MapReduce computes global token frequencies
+    (the paper's default job), and the stream samples from that distribution."""
+    from repro.core.mapreduce import (MapReduceEngine, make_corpus,
+                                      word_count_job)
+    corpus = make_corpus(n_files, file_len, vocab)
+    eng = MapReduceEngine(mesh, backend=backend)
+    counts = eng.run(word_count_job(vocab, use_kernel=use_kernel),
+                     jnp.asarray(corpus))
+    freq = np.asarray(counts, np.float64)
+    freq = freq / freq.sum()
+
+    def sample(key, shape):
+        return jax.random.choice(key, vocab, shape=shape, p=jnp.asarray(freq))
+
+    return sample, counts

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  sm_scale=None):
+    """q: (BH, Sq, hd); k, v: (BH, Skv, hd)."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = hd ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Histogram (word count) — Pallas TPU kernel.
+
+The MapReduce layer's map() hot spot: counting token occurrences.  A GPU
+would use shared-memory atomics; the TPU adaptation replaces atomics with a
+(block_t × block_v) broadcast-compare + row-sum (VPU-friendly), accumulating
+per-vocab-block partial counts in VMEM across the token grid axis.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _hist_kernel(t_ref, o_ref, acc_ref, *, block_v: int, n_t_blocks: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vi = pl.program_id(0)
+    toks = t_ref[...]                                   # (bt,)
+    v_base = vi * block_v
+    vocab_ids = v_base + jax.lax.broadcasted_iota(
+        jnp.int32, (toks.shape[0], block_v), 1)
+    hits = (toks[:, None] == vocab_ids).astype(jnp.int32)
+    acc_ref[...] += jnp.sum(hits, axis=0)
+
+    @pl.when(ti == n_t_blocks - 1)
+    def _write():
+        o_ref[...] = acc_ref[...]
+
+
+def histogram_kernel(tokens, vocab: int, *, block_t: int = 256,
+                     block_v: int = 512, interpret: bool = False):
+    """tokens: (T,) int32 in [0, vocab) -> counts (vocab,) int32."""
+    T = tokens.shape[0]
+    block_t = min(block_t, T)
+    block_v = min(block_v, vocab)
+    assert T % block_t == 0 and vocab % block_v == 0
+    nt, nv = T // block_t, vocab // block_v
+
+    kernel = functools.partial(_hist_kernel, block_v=block_v, n_t_blocks=nt)
+    return pl.pallas_call(
+        kernel,
+        grid=(nv, nt),
+        in_specs=[pl.BlockSpec((block_t,), lambda v, t: (t,))],
+        out_specs=pl.BlockSpec((block_v,), lambda v, t: (v,)),
+        out_shape=jax.ShapeDtypeStruct((vocab,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_v,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tokens)

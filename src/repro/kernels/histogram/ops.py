@@ -1,0 +1,16 @@
+"""Jitted wrapper for the histogram kernel."""
+import functools
+
+import jax
+
+from repro.kernels.histogram.kernel import histogram_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "block_t", "block_v"))
+def histogram(tokens, vocab: int, *, block_t=256, block_v=512):
+    return histogram_kernel(tokens, vocab, block_t=block_t, block_v=block_v,
+                            interpret=not _on_tpu())

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax.numpy as jnp
+
+
+def histogram_ref(tokens, vocab: int):
+    return jnp.zeros((vocab,), jnp.int32).at[tokens].add(
+        jnp.ones_like(tokens, jnp.int32), mode="drop")

@@ -1,0 +1,34 @@
+"""Jitted wrapper for the SSD scan kernel."""
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd(x, dt, A, B, C, chunk):
+    return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=not _on_tpu())
+
+
+def _ssd_fwd(x, dt, A, B, C, chunk):
+    return _ssd(x, dt, A, B, C, chunk), (x, dt, A, B, C)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, A, B, C = res
+    _, vjp = jax.vjp(ssd_ref, x, dt, A, B, C)
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A, B, C, *, chunk=128):
+    return _ssd(x, dt, A, B, C, chunk)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: the exact sequential SSD recurrence (no chunking)."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: (BH,S,P); dt: (BH,S); A: (BH,); B,C: (BH,S,N) -> (BH,S,P).
+
+      h_t = h_{t-1} * exp(dt_t A) + dt_t * B_t ⊗ x_t
+      y_t = C_t · h_t
+    """
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+
+    def per_seq(xs, dts, a, bs, cs):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = h * jnp.exp(dtt * a) + dtt * (xt[:, None] * bt[None, :])
+            return h, h @ ct
+        P, N = xs.shape[-1], bs.shape[-1]
+        h0 = jnp.zeros((P, N), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xs, dts, bs, cs))
+        return ys
+
+    return jax.vmap(per_seq)(x, dt, A, B, C).astype(x.dtype)

@@ -1,0 +1,57 @@
+"""Serving driver: continuous batching with the thesis's two brokers.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+      --requests 12 --slots 4 --policy matchmaking
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.model import build_model
+from repro.serve.scheduler import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--policy", default="matchmaking",
+                    choices=["matchmaking", "round_robin"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    rng = np.random.default_rng(args.seed)
+    engine = ServeEngine(model, params, n_slots=args.slots,
+                         max_len=args.max_len, policy=args.policy)
+    for i in range(args.requests):
+        plen = int(rng.integers(2, args.max_len // 4))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        engine.sched.submit(Request(req_id=i, prompt=prompt,
+                                    max_new_tokens=int(rng.integers(2, 8))))
+    t0 = time.time()
+    out = engine.run(max_steps=256)
+    wall = time.time() - t0
+    print(f"policy={args.policy} completed={len(out['completed'])}/"
+          f"{args.requests} steps={out['steps']} dropped={out['dropped']} "
+          f"wall={wall:.1f}s")
+    for r in out["completed"][:4]:
+        print(f"  req {r.req_id}: prompt[{len(r.prompt)}] -> {r.output}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input of every
+(arch × shape) cell, plus the matching shardings.  Weak-type-correct,
+shardable, zero allocation (the dry-run lowers against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch import mesh as mesh_lib
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg, shape, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    b = mesh_lib.batch_axes(mesh)
+    sh = lambda ndim: NamedSharding(mesh, P(b, *([None] * (ndim - 1))))
+    specs, shards = {}, {}
+    text_S = S
+    if cfg.frontend == "vision_stub":
+        text_S = S - cfg.frontend_tokens
+        specs["patches"] = _sds((B, cfg.frontend_tokens, cfg.frontend_dim),
+                                jnp.float32)
+        shards["patches"] = sh(3)
+    if cfg.is_encdec:
+        specs["frames"] = _sds((B, S, cfg.frontend_dim), jnp.float32)
+        shards["frames"] = sh(3)
+    specs.update({"tokens": _sds((B, text_S), jnp.int32),
+                  "labels": _sds((B, S), jnp.int32),
+                  "mask": _sds((B, S), jnp.float32)})
+    shards.update({"tokens": sh(2), "labels": sh(2), "mask": sh(2)})
+    return specs, shards
+
+
+def cache_specs(model, shape, mesh, dtype=jnp.bfloat16):
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    cross = S if cfg.is_encdec else 0
+    caches = jax.eval_shape(
+        lambda: model.make_caches(B, max_len=S, cross_len=cross, dtype=dtype))
+    shards = mesh_lib.cache_shardings(model, mesh, B, caches_tree=caches)
+    return caches, shards
+
+
+def decode_token_specs(cfg, shape, mesh):
+    B = shape.global_batch
+    shard_b = B >= mesh_lib.data_axis_size(mesh)
+    sh = mesh_lib.batch_sharding(mesh, 2, shard_batch=shard_b)
+    return _sds((B, 1), jnp.int32), sh
+
+
+def input_specs(arch: str, shape_name: str, mesh, model=None):
+    """All inputs for the cell's step: {"kind", "args": (specs...), "shardings"}."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        specs, shards = train_batch_specs(cfg, shape, mesh)
+        return {"kind": "train", "batch": specs, "batch_shardings": shards}
+    if shape.kind == "prefill":
+        specs, shards = train_batch_specs(cfg, shape, mesh)
+        specs.pop("labels"), specs.pop("mask")
+        shards.pop("labels"), shards.pop("mask")
+        return {"kind": "prefill", "batch": specs, "batch_shardings": shards}
+    return {"kind": "decode"}
+
+
+def pick_microbatches(cfg, shape, mesh, budget_bytes: float = 2.0e9) -> int:
+    """Grad-accum factor bounding per-device saved activations (remat carries:
+    ~n_layers × B_local/n × S × d_model × 2B)."""
+    dp = mesh_lib.data_axis_size(mesh)
+    b_local = max(shape.global_batch // dp, 1)
+    per = cfg.n_layers * b_local * shape.seq_len * cfg.d_model * 2
+    n = 1
+    while per / n > budget_bytes and n < b_local:
+        n *= 2
+    return n

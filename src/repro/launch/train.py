@@ -1,0 +1,87 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --steps 300 \
+      --batch 8 --seq 512 [--reduced] [--elastic] [--ckpt DIR]
+
+Runs the real loop on the local devices: data pipeline → jitted train step →
+health monitor → (optional) adaptive scaling and checkpointing.  ``--reduced``
+shrinks the arch to its smoke-test config (same family) for CPU runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.health import HealthConfig
+from repro.data.pipeline import DataConfig
+from repro.models.model import build_model
+from repro.train.elastic_runner import run_elastic_training
+from repro.train.optimizer import AdamWConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override depth (0 = arch default)")
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--elastic", action="store_true")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--target-step-time", type=float, default=1.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        over = {}
+        if args.layers:
+            over["n_layers"] = args.layers
+        if args.d_model:
+            over["d_model"] = args.d_model
+            over["n_heads"] = max(args.d_model // 64, 1)
+            over["n_kv_heads"] = max(args.d_model // 128, 1)
+            over["head_dim"] = 64
+            over["d_ff"] = args.d_model * 3
+        if args.vocab:
+            over["vocab_size"] = args.vocab
+        cfg = reduced(cfg, **over)
+
+    model = build_model(cfg, remat=True, xent_chunk=min(128, args.seq))
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+    health = HealthConfig(target_step_time=args.target_step_time)
+    t0 = time.time()
+    report = run_elastic_training(
+        model, steps=args.steps, data_cfg=data_cfg,
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                            total_steps=args.steps),
+        health_cfg=health,
+        ckpt_dir=args.ckpt or None,
+        start_instances=len(jax.devices()) if args.elastic else
+        len(jax.devices()))
+    wall = time.time() - t0
+
+    n = args.log_every
+    for i in range(0, len(report.losses), n):
+        print(f"step {i:5d} loss {report.losses[i]:.4f}")
+    print(f"final loss {report.losses[-1]:.4f} | {args.steps} steps in "
+          f"{wall:.1f}s ({args.steps * args.batch * args.seq / wall:.0f} tok/s)"
+          f" | params {cfg.param_count() / 1e6:.1f}M | "
+          f"scale events {report.scale_events}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

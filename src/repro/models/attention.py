@@ -1,0 +1,192 @@
+"""Attention: GQA with RoPE, sliding-window/global variants, prefill/decode.
+
+Two implementations share one signature:
+  * ``impl="xla"``   — pure-jnp, query-chunked (bounded score memory); used by the
+                       dry-run/roofline path (CPU container) and as the oracle.
+  * ``impl="pallas"``— flash kernel from ``repro.kernels.flash_attention`` (TPU
+                       target; validated in interpret mode by the kernel tests).
+
+Sliding-window layers slice K/V to the window span per query chunk, so local
+attention is genuinely sub-quadratic in compute (not just masked out).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+from repro.models.layers import rope
+
+
+def attention_defs(cfg):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamDef((d, H * hd), ("fsdp", "tp")),
+        "wk": ParamDef((d, KV * hd), ("fsdp", "tp")),
+        "wv": ParamDef((d, KV * hd), ("fsdp", "tp")),
+        "wo": ParamDef((H * hd, d), ("tp", "fsdp")),
+    }
+
+
+def cross_attention_defs(cfg):
+    defs = attention_defs(cfg)
+    defs["wk"] = ParamDef((cfg.d_model, cfg.n_kv_heads * cfg.head_dim), ("fsdp", "tp"))
+    return defs
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, n_rep, hd)).reshape(
+        B, S, KV * n_rep, hd)
+
+
+def _chunked_attn(q, k, v, *, causal: bool, window: int, q_offset,
+                  kv_len: Optional[jax.Array], q_chunk: int,
+                  scores_bf16: bool = False, chunk_remat: bool = True):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,H,hd) (already GQA-repeated).
+
+    q_offset: starting absolute position of q (int or traced scalar).
+    kv_len:   optional valid KV length (decode with a partially filled cache).
+    window:   0 = full; >0 = sliding window (query i sees keys in (i-window, i]).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    n_chunks = max(Sq // q_chunk, 1)
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+
+    kv_pos = jnp.arange(Skv)
+
+    def one_chunk(qc, qs):
+        # qc: (B,c,H,hd); qs: absolute start position of the chunk
+        q_pos = qs + jnp.arange(q_chunk)
+        if window > 0 and Skv > window + q_chunk:
+            # slice KV to the reachable span: [qs - window + 1, qs + q_chunk)
+            start = jnp.clip(qs - window + 1, 0, Skv - (window + q_chunk))
+            ks = jax.lax.dynamic_slice_in_dim(k, start, window + q_chunk, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, window + q_chunk, axis=1)
+            kp = start + jnp.arange(window + q_chunk)
+        else:
+            ks, vs, kp = k, v, kv_pos
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, ks,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((q_chunk, kp.shape[0]), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= kp[None, :]
+        if window > 0:
+            mask &= q_pos[:, None] - kp[None, :] < window
+        if kv_len is not None:
+            mask &= (kp[None, :] < kv_len)
+        s = jnp.where(mask[None, None], s, -1e30)
+        if scores_bf16:
+            # hillclimb lever: halve score-chain HBM traffic (softmax performs
+            # its own max-shift; iteration 1 showed an explicit pre-shift only
+            # ADDS a materialized buffer — refuted, removed)
+            s = s.astype(jnp.bfloat16)
+        p = jax.nn.softmax(s, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vs)
+
+    if n_chunks == 1:
+        return one_chunk(q, q_offset)
+
+    qr = q.reshape(B, n_chunks, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    # remat: backward recomputes the chunk's scores instead of stacking all
+    # (n_chunks, B, H, c, Skv) score tensors (flash-attention memory shape).
+    # chunk_remat=False instead saves the (bf16) probability tensors — one
+    # fewer score recompute per chunk at a bounded memory cost (§Perf h5).
+    chunk_fn = (jax.checkpoint(lambda qc, qs: one_chunk(qc, qs),
+                               prevent_cse=False)
+                if chunk_remat else (lambda qc, qs: one_chunk(qc, qs)))
+
+    def body(_, inp):
+        qc, i = inp
+        return None, chunk_fn(qc, q_offset + i * q_chunk)
+
+    _, out = jax.lax.scan(body, None, (qr, jnp.arange(n_chunks)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def multihead_attention(params, x, cfg, *, causal=True, window=0, positions=None,
+                        kv_cache=None, cache_len=None, kv_override=None,
+                        static_cache=False, impl="xla", q_chunk=256,
+                        compute_dtype=jnp.bfloat16, opts=None):
+    opts = opts or {}
+    q_chunk = opts.get("q_chunk", q_chunk)
+    """Full GQA attention.
+
+    kv_cache: optional dict {"k","v"} of (B, S_max, KV, hd) — decode/step mode;
+              new K/V written at ``cache_len`` and attention runs over the cache.
+    kv_override: source activations for cross-attention K/V.
+    static_cache: attend over the cache as-is (cross-attention at decode);
+              nothing is projected or written, ``cache_len`` = valid length.
+    Returns (out, new_cache).
+    """
+    B, Sq, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    wq = params["wq"].astype(compute_dtype)
+    wo = params["wo"].astype(compute_dtype)
+
+    if positions is None:
+        base = cache_len if (kv_cache is not None and not static_cache) else 0
+        positions = base + jnp.arange(Sq)[None, :]
+
+    q = (x @ wq).reshape(B, Sq, H, hd)
+
+    if static_cache:
+        k = kv_cache["k"].astype(compute_dtype)
+        v = kv_cache["v"].astype(compute_dtype)
+        k = _repeat_kv(k, H // KV)
+        v = _repeat_kv(v, H // KV)
+        out = _chunked_attn(q, k, v, causal=False, window=0, q_offset=0,
+                            kv_len=cache_len, q_chunk=q_chunk)
+        return out.reshape(B, Sq, H * hd) @ wo, None
+
+    wk = params["wk"].astype(compute_dtype)
+    wv = params["wv"].astype(compute_dtype)
+    xkv = x if kv_override is None else kv_override
+    k = (xkv @ wk).reshape(B, xkv.shape[1], KV, hd)
+    v = (xkv @ wv).reshape(B, xkv.shape[1], KV, hd)
+
+    use_rope = kv_override is None  # no RoPE on cross-attention
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_len, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(compute_dtype), cv.astype(compute_dtype)
+        kv_len = cache_len + Sq
+        q_offset = cache_len
+    else:
+        kv_len = None
+        q_offset = 0
+
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+
+    if impl == "pallas" and kv_cache is None:
+        # train/prefill self-attention; cached stepping (traced offsets,
+        # gather-bound) stays on the XLA path
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset, kv_len=kv_len)
+    else:
+        out = _chunked_attn(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, kv_len=kv_len, q_chunk=q_chunk,
+                            scores_bf16=opts.get("scores_bf16", False),
+                            chunk_remat=opts.get("attn_chunk_remat", True))
+
+    out = out.reshape(B, Sq, H * hd) @ wo
+    return out, new_cache

@@ -1,0 +1,109 @@
+"""Core layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, chunked cross-entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+
+# ------------------------------------------------------------------ RMSNorm
+
+def rmsnorm_defs(d: int):
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,S,1,half)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+
+def mlp_defs(d: int, f: int):
+    return {
+        "w_gate": ParamDef((d, f), ("fsdp", "tp")),
+        "w_in": ParamDef((d, f), ("fsdp", "tp")),
+        "w_out": ParamDef((f, d), ("tp", "fsdp")),
+    }
+
+
+def mlp(params, x, compute_dtype=jnp.bfloat16):
+    wg = params["w_gate"].astype(compute_dtype)
+    wi = params["w_in"].astype(compute_dtype)
+    wo = params["w_out"].astype(compute_dtype)
+    h = jax.nn.silu(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+# ------------------------------------------------------------------ Embedding
+
+def embedding_defs(vocab: int, d: int, tie: bool):
+    defs = {"table": ParamDef((vocab, d), ("vocab", "embed"), scale=d ** -0.5)}
+    if not tie:
+        defs["unembed"] = ParamDef((d, vocab), ("embed", "vocab"))
+    return defs
+
+
+def embed(params, tokens, compute_dtype=jnp.bfloat16):
+    return jnp.take(params["table"].astype(compute_dtype), tokens, axis=0)
+
+
+def unembed_matrix(params, compute_dtype=jnp.bfloat16):
+    if "unembed" in params:
+        return params["unembed"].astype(compute_dtype)
+    return params["table"].astype(compute_dtype).T
+
+
+# ------------------------------------------------------- chunked cross-entropy
+
+def chunked_xent(x, unemb, labels, mask, chunk: int = 512):
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    x: (B,S,D) activations; unemb: (D,V); labels/mask: (B,S).
+    Scans over sequence chunks; V stays sharded over "model" so the logsumexp
+    reduction is a partial-sum + all-reduce under SPMD.
+    Returns (sum_loss, sum_mask).
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        xi, li, mi = inp
+        logits = (xi @ unemb).astype(jnp.float32)            # (B,c,V) V sharded
+        lse = jax.nn.logsumexp(logits, axis=-1)              # partial+all-reduce
+        picked = jnp.sum(
+            logits * jax.nn.one_hot(li, logits.shape[-1],
+                                    dtype=jnp.bfloat16).astype(jnp.float32),
+            axis=-1)
+        nll = (lse - picked) * mi
+        loss, cnt = carry
+        return (loss + nll.sum(), cnt + mi.sum()), None
+
+    # remat: backward recomputes per-chunk logits instead of saving them all.
+    body = jax.checkpoint(body, prevent_cse=False)
+    (loss, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                  (xc, lc, mc))
+    return loss, cnt

@@ -1,0 +1,128 @@
+"""Top-level model: embeddings + frontend stubs + stack + chunked loss.
+
+``build_model(cfg)`` returns a functional bundle:
+  defs()                         ParamDef tree (shapes + logical shardings)
+  init(key)                      materialized params
+  loss_fn(params, batch)         -> (loss, metrics)          [train]
+  prefill(params, batch, caches) -> (last_logits, caches)    [serve]
+  decode(params, tokens, caches, cache_len) -> (logits, caches)
+
+Batches (all integer arrays unless noted):
+  train:   {"tokens": (B,S), "labels": (B,S), "mask": (B,S) f32}
+           + vlm: {"patches": (B,n_patch,frontend_dim) f32}  (tokens: (B,S-n_patch))
+           + audio/enc-dec: {"frames": (B,S,frontend_dim) f32} (encoder side)
+  decode:  tokens (B,1)
+"""
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import (chunked_xent, embed, embedding_defs, rmsnorm,
+                                 rmsnorm_defs, unembed_matrix)
+from repro.models.param import ParamDef, init_params
+
+
+def model_defs(cfg):
+    defs = {
+        "embedding": embedding_defs(cfg.padded_vocab, cfg.d_model,
+                                    cfg.tie_embeddings),
+        "final_norm": rmsnorm_defs(cfg.d_model),
+        "stack": tfm.stack_defs_for(cfg),
+    }
+    if cfg.is_encdec:
+        defs["encoder"] = tfm.encoder_stack_defs(cfg)
+        defs["enc_norm"] = rmsnorm_defs(cfg.d_model)
+    if cfg.frontend == "vision_stub":
+        defs["projector"] = {
+            "w1": ParamDef((cfg.frontend_dim, cfg.d_model), (None, "fsdp")),
+            "w2": ParamDef((cfg.d_model, cfg.d_model), ("fsdp", None)),
+        }
+    if cfg.frontend == "audio_stub":
+        defs["frontend_proj"] = {
+            "w": ParamDef((cfg.frontend_dim, cfg.d_model), (None, "fsdp"))}
+    return defs
+
+
+def _frontend_embed(params, batch, cfg, compute_dtype):
+    """Returns (x (B,S,D), encoder input or None)."""
+    if cfg.frontend == "vision_stub":
+        tok_x = embed(params["embedding"], batch["tokens"], compute_dtype)
+        p = batch["patches"].astype(compute_dtype)
+        p = jax.nn.gelu(p @ params["projector"]["w1"].astype(compute_dtype))
+        p = p @ params["projector"]["w2"].astype(compute_dtype)
+        return jnp.concatenate([p, tok_x], axis=1), None
+    if cfg.is_encdec:
+        enc_in = batch["frames"].astype(compute_dtype) @ params[
+            "frontend_proj"]["w"].astype(compute_dtype)
+        return embed(params["embedding"], batch["tokens"], compute_dtype), enc_in
+    return embed(params["embedding"], batch["tokens"], compute_dtype), None
+
+
+def build_model(cfg, *, impl="xla", moe_impl="sliced", remat=True,
+                compute_dtype=jnp.bfloat16, xent_chunk=512, opts=None):
+    defs = model_defs(cfg)
+
+    def init(key):
+        return init_params(defs, key)
+
+    def _encode(params, enc_in):
+        h = tfm.apply_encoder_stack(params["encoder"], enc_in, cfg, impl=impl,
+                                    remat=remat, compute_dtype=compute_dtype)
+        return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+    def _backbone(params, x, *, caches=None, cache_len=None, enc_out=None,
+                  mode="train"):
+        x, new_caches = tfm.apply_stack(
+            params["stack"], x, cfg, caches=caches, cache_len=cache_len,
+            enc_out=enc_out, mode=mode, impl=impl, moe_impl=moe_impl,
+            remat=remat and mode == "train", compute_dtype=compute_dtype,
+            opts=opts)
+        return rmsnorm(params["final_norm"], x, cfg.norm_eps), new_caches
+
+    # ------------------------------------------------------------- training
+    def loss_fn(params, batch):
+        x, enc_in = _frontend_embed(params, batch, cfg, compute_dtype)
+        enc_out = _encode(params, enc_in) if cfg.is_encdec else None
+        if cfg.is_encdec:
+            # uniform stack needs per-layer cross caches in train mode too:
+            # build zeros so scan carries a consistent ys pytree.
+            x, _ = _backbone(params, x, enc_out=enc_out, mode="train")
+        else:
+            x, _ = _backbone(params, x, mode="train")
+        unemb = unembed_matrix(params["embedding"], compute_dtype)
+        loss_sum, cnt = chunked_xent(x, unemb, batch["labels"], batch["mask"],
+                                     chunk=xent_chunk)
+        loss = loss_sum / jnp.maximum(cnt, 1.0)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    # -------------------------------------------------------------- serving
+    def prefill(params, batch, caches):
+        x, enc_in = _frontend_embed(params, batch, cfg, compute_dtype)
+        enc_out = _encode(params, enc_in) if cfg.is_encdec else None
+        x, caches = _backbone(params, x, caches=caches, cache_len=0,
+                              enc_out=enc_out, mode="prefill")
+        unemb = unembed_matrix(params["embedding"], compute_dtype)
+        logits = x[:, -1:] @ unemb
+        return logits.astype(jnp.float32), caches
+
+    def decode(params, tokens, caches, cache_len):
+        x = embed(params["embedding"], tokens, compute_dtype)
+        x, caches = _backbone(params, x, caches=caches, cache_len=cache_len,
+                              mode="decode")
+        unemb = unembed_matrix(params["embedding"], compute_dtype)
+        logits = x @ unemb
+        return logits.astype(jnp.float32), caches
+
+    def make_caches(batch: int, max_len: int, cross_len: int = 0,
+                    dtype=jnp.bfloat16):
+        return tfm.make_stack_caches(cfg, batch, max_len,
+                                     cross_len=cross_len, dtype=dtype)
+
+    return SimpleNamespace(cfg=cfg, defs=lambda: defs, init=init,
+                           loss_fn=loss_fn, prefill=prefill, decode=decode,
+                           make_caches=make_caches)

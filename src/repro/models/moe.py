@@ -1,0 +1,134 @@
+"""Mixture-of-Experts with the paper's *matchmaking broker* as the router.
+
+Cloud²Sim's fair matchmaking scheduler binds each cloudlet to the best-fitting
+VM subject to a fairness/capacity constraint (§5.1.2).  The MoE router is the
+same algorithm: each token (cloudlet) is matched to its top-k experts (VMs),
+subject to per-expert capacity; overflow tokens fall through to the residual
+path (the paper's "waiting queue").
+
+Implementations
+---------------
+  * ``moe_impl="sliced"``  (default): capacity-sliced grouped matmul.  Tokens are
+    sorted by expert id; each expert computes one static ``(capacity, D)`` slice.
+    Expert weights are laid out ``(E, D, F)`` with FSDP over D and TP over F, so
+    every device runs *its own tokens* through *its F-slice of all experts* —
+    zero token exchange (the paper's data-locality principle:
+    ``executeOnKeyOwner``).  Works for any (E, tp) combination (grok has E=8 <
+    tp=16, which forbids expert-dim sharding).
+  * ``moe_impl="dense"``: every expert computes every token (weighted by the
+    combine probabilities, zeros for unrouted).  Exponentially wasteful — used
+    only as the correctness oracle for property tests.
+  * ``moe_impl="ep"``: shard_map expert-parallel with all_to_all dispatch —
+    the beyond-paper optimized path (see repro/models/moe_ep.py), valid when
+    E % tp == 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+
+def moe_defs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    return {
+        "w_router": ParamDef((d, e), ("fsdp", None)),
+        "we_gate": ParamDef((e, d, f), ("exp", "fsdp", "moe_ff")),
+        "we_in": ParamDef((e, d, f), ("exp", "fsdp", "moe_ff")),
+        "we_out": ParamDef((e, f, d), ("exp", "moe_ff", "fsdp")),
+    }
+
+
+def matchmaking_route(router_logits, k: int, capacity: int):
+    """Fair matchmaking: top-k expert choice with per-expert capacity.
+
+    Returns (probs (T,k), expert_ids (T,k), keep (T,k) bool).
+    Position-in-expert is priority-ordered by token index (the paper's
+    round-robin fairness among equally matched bids).
+    """
+    T, E = router_logits.shape
+    probs_full = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    probs, ids = jax.lax.top_k(probs_full, k)                   # (T,k)
+    flat_ids = ids.reshape(-1)                                  # (T*k,)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)       # (T*k,E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1)            # running count
+    pos = jnp.take_along_axis(pos_in_expert, flat_ids[:, None], axis=1)[:, 0]
+    keep = (pos < capacity).reshape(T, k)
+    return probs, ids, keep, pos.reshape(T, k)
+
+
+def moe_block(params, x, cfg, *, compute_dtype=jnp.bfloat16, moe_impl="sliced"):
+    """x: (B,S,D) -> (B,S,D)."""
+    if moe_impl == "ep":
+        from repro.models.moe_ep import moe_block_ep
+        return moe_block_ep(params, x, cfg, compute_dtype=compute_dtype)
+    B, S, D = x.shape
+    E, K, F = cfg.n_experts, cfg.n_experts_active, cfg.d_ff_expert
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = xf @ params["w_router"].astype(compute_dtype)      # (T,E)
+
+    if moe_impl == "dense":
+        return _moe_dense(params, xf, logits, cfg, compute_dtype).reshape(B, S, D)
+
+    capacity = int(cfg.capacity_factor * T * K / E)
+    capacity = max(8, min(capacity, T))
+    probs, ids, keep, pos = matchmaking_route(logits, K, capacity)
+
+    # ---- dispatch: sort token copies by expert, take static capacity slices
+    flat_ids = ids.reshape(-1)
+    flat_pos = pos.reshape(-1)
+    flat_keep = keep.reshape(-1)
+    # slot index within the (E * capacity) dispatch buffer; dropped -> sentinel
+    slot = jnp.where(flat_keep, flat_ids * capacity + flat_pos, E * capacity)
+    # token id owning each slot (scatter; sentinel row collects drops)
+    slot_tok = jnp.zeros(E * capacity + 1, dtype=jnp.int32).at[slot].set(
+        jnp.arange(T * K, dtype=jnp.int32) // K, mode="drop")
+    slot_used = jnp.zeros(E * capacity + 1, dtype=jnp.bool_).at[slot].set(
+        True, mode="drop")
+    slot_tok, slot_used = slot_tok[:-1], slot_used[:-1]
+
+    x_disp = jnp.take(xf, slot_tok, axis=0) * slot_used[:, None].astype(xf.dtype)
+    x_disp = x_disp.reshape(E, capacity, D)
+
+    wg = params["we_gate"].astype(compute_dtype)
+    wi = params["we_in"].astype(compute_dtype)
+    wo = params["we_out"].astype(compute_dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_disp, wg)) * jnp.einsum(
+        "ecd,edf->ecf", x_disp, wi)
+    y_disp = jnp.einsum("ecf,efd->ecd", h, wo).reshape(E * capacity, D)
+
+    # ---- combine: gather each token-copy's slot output, weight, sum over k
+    gather_slot = jnp.where(flat_keep, flat_ids * capacity + flat_pos, 0)
+    y_tok = jnp.take(y_disp, gather_slot, axis=0)               # (T*k, D)
+    w = (probs.reshape(-1) * flat_keep).astype(compute_dtype)
+    y = (y_tok * w[:, None]).reshape(T, K, D).sum(axis=1)
+    return y.reshape(B, S, D)
+
+
+def _moe_dense(params, xf, logits, cfg, compute_dtype):
+    """Oracle: all experts on all tokens, combine by (top-k-masked) probs."""
+    E, K = cfg.n_experts, cfg.n_experts_active
+    probs_full = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, _ = jax.lax.top_k(probs_full, K)
+    mask = probs_full >= topv[:, -1:]
+    cw = (probs_full * mask).astype(compute_dtype)              # (T,E)
+    wg = params["we_gate"].astype(compute_dtype)
+    wi = params["we_in"].astype(compute_dtype)
+    wo = params["we_out"].astype(compute_dtype)
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", xf, wg)) * jnp.einsum(
+        "td,edf->etf", xf, wi)
+    y = jnp.einsum("etf,efd->etd", h, wo)
+    return jnp.einsum("etd,te->td", y, cw)
+
+
+def aux_load_balance_loss(router_logits, k: int):
+    """Switch-style load-balancing auxiliary loss (fairness metric)."""
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    _, ids = jax.lax.top_k(probs, k)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(axis=1), axis=0)
+    frac_probs = probs.mean(axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,145 @@
+"""Parameter declaration framework.
+
+Layers declare parameters once as ``ParamDef`` trees (shape + *logical* sharding
+axes + init).  From one declaration we derive: materialized params, abstract
+shapes for the dry-run (no allocation), and ``PartitionSpec`` trees resolved
+against a concrete mesh and the arch's sharding policy.
+
+Logical axes
+------------
+  "fsdp"   weight dim sharded over the FSDP axis (ZeRO-style)
+  "tp"     weight dim sharded over tensor-parallel axis
+  "vocab"  vocabulary dim           "embed"  embedding dim
+  "exp"    MoE expert dim           None     replicated dim
+  "layer"  stacked-scan leading dim (never sharded)
+
+Policy resolution (see DESIGN.md §5)
+  policy="tp":    fsdp->data   tp->model
+  policy="fsdp":  fsdp->(data,model)  tp->None     (small archs: 2-D DP/FSDP)
+Both: vocab->model, embed->data, exp->None, layer->None.  The "pod" axis only
+shards the batch (pure DP across pods) in the paper-faithful baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    spec: tuple            # logical axis name (or None) per dim
+    init: str = "normal"   # normal | zeros | ones
+    scale: Optional[float] = None
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.spec), (self.shape, self.spec)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=_is_def)
+
+
+def init_params(defs, key):
+    """Materialize a ParamDef tree into an array pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            scale = d.scale if d.scale is not None else fan_in ** -0.5
+            out.append((jax.random.normal(k, d.shape) * scale).astype(d.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree (dry-run: shapes only, no allocation)."""
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def logical_specs(defs):
+    return tree_map_defs(lambda d: d.spec, defs)
+
+
+# --------------------------------------------------------------------- resolve
+
+def axis_rules(policy: str, mesh: Mesh, fsdp_pod: bool = False,
+               overrides: dict = None) -> dict:
+    has_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if has_pod else ("data",)
+    fsdp = ("pod", "data") if (fsdp_pod and has_pod) else ("data",)
+    if policy == "tp":
+        rules = {"fsdp": fsdp, "tp": "model", "act_seq": None}
+    elif policy == "fsdp":
+        # small archs (heads don't divide tp): params FSDP over data, compute
+        # sequence-parallel over "model" (activations seq-sharded).
+        rules = {"fsdp": fsdp, "tp": None, "act_seq": "model"}
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    rules["moe_ff"] = rules["tp"]
+    rules.update({"vocab": "model", "embed": "data", "exp": None, "layer": None,
+                  "batch": batch, None: None})
+    if overrides:
+        rules.update(overrides)
+
+    # drop mesh axes this mesh does not have (e.g. a 1-D ("data",) test mesh,
+    # or a single-pod mesh without "pod")
+    def _filter(v):
+        if v is None:
+            return None
+        axes = v if isinstance(v, tuple) else (v,)
+        kept = tuple(a for a in axes if a in mesh.axis_names)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    return {k: _filter(v) for k, v in rules.items()}
+
+
+def resolve_spec(logical: tuple, rules: dict) -> P:
+    return P(*[rules.get(ax, None) for ax in logical])
+
+
+def resolve_shardings(defs_or_specs, policy: str, mesh: Mesh, logical: bool = False,
+                      fsdp_pod: bool = False, overrides: dict = None):
+    """ParamDef tree (or logical-spec tree) -> NamedSharding tree."""
+    rules = axis_rules(policy, mesh, fsdp_pod=fsdp_pod, overrides=overrides)
+    if not logical:
+        defs_or_specs = logical_specs(defs_or_specs)
+
+    def _one(spec):
+        return NamedSharding(mesh, resolve_spec(spec, rules))
+    return jax.tree_util.tree_map(_one, defs_or_specs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+
+def stack_defs(defs, n: int):
+    """Prepend a stacked-scan 'layer' dim of extent n to every ParamDef."""
+    return tree_map_defs(
+        lambda d: ParamDef((n,) + d.shape, ("layer",) + d.spec, d.init, d.scale,
+                           d.dtype), defs)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=_is_def)
+    total = 0
+    for d in leaves:
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total

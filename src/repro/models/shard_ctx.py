@@ -1,0 +1,57 @@
+"""Activation-sharding context.
+
+Model code calls ``constrain(x, logical_axes)`` at key points; when a launcher
+has installed a (mesh, policy) context this becomes a
+``with_sharding_constraint`` pinning activations to the intended layout
+(stopping the SPMD partitioner from inventing bad reshards).  Outside a
+context (unit tests, single device) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.param import axis_rules, resolve_spec
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_rules(policy: str, mesh: Mesh, fsdp_pod: bool = False, **overrides):
+    rules = axis_rules(policy, mesh, fsdp_pod=fsdp_pod)
+    rules.update(overrides)
+    tok = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def constrain(x, logical: Tuple):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(logical, rules)
+    # drop mesh axes that do not divide the corresponding dim (e.g. a seq dim
+    # of 1 at decode, or a small remainder batch)
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def current_rules():
+    return _CTX.get()

@@ -1,0 +1,189 @@
+"""Mamba2 SSD (state-space duality) mixer: chunked quadratic-intra +
+recurrent-inter scan for train/prefill, O(1)-state step for decode.
+
+TPU adaptation (DESIGN.md §2): the CUDA mamba2 kernel's warp-level segmented
+scan becomes a chunked formulation — intra-chunk terms are MXU-friendly
+batched matmuls (the "duality" attention form), inter-chunk recurrence is a
+``lax.scan`` over chunk states.  Heads are sharded over the TP axis; the
+chunk scan is local to every shard (no collectives inside the mixer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+
+def ssm_defs(cfg):
+    d = cfg.d_model
+    di = cfg.d_ssm_inner
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    w = cfg.ssm_conv
+    return {
+        "wz": ParamDef((d, di), ("fsdp", "tp")),
+        "wx": ParamDef((d, di), ("fsdp", "tp")),
+        "wbc": ParamDef((d, 2 * G * N), ("fsdp", None)),
+        "wdt": ParamDef((d, H), ("fsdp", "tp")),
+        "conv_x": ParamDef((w, di), (None, "tp"), scale=w ** -0.5),
+        "conv_bc": ParamDef((w, 2 * G * N), (None, None), scale=w ** -0.5),
+        "dt_bias": ParamDef((H,), ("tp",), init="zeros"),
+        "a_log": ParamDef((H,), ("tp",), init="ones"),
+        "d_skip": ParamDef((H,), ("tp",), init="ones"),
+        "norm": ParamDef((di,), ("tp",), init="ones"),
+        "w_out": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv. x: (B,S,C); w: (width,C); tail: (B,width-1,C)."""
+    width = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out, xp[:, -(width - 1):, :]
+
+
+def _group_to_heads(t, H):
+    """(B,...,G,N) -> (B,...,H,N) by repeating groups across their heads."""
+    G = t.shape[-2]
+    rep = H // G
+    return jnp.repeat(t, rep, axis=-2) if rep > 1 else t
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int):
+    """SSD over a full sequence.
+
+    x: (B,S,H,P)  dt: (B,S,H) (post-softplus)  A: (H,) (negative)
+    B_,C_: (B,S,H,N) (already group-broadcast).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, Pd = x.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def r(t):  # (B,S,...) -> (nc, B, chunk, ...)
+        return t.reshape(Bb, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    xc, dtc, Bc, Cc = r(x), r(dt), r(B_), r(C_)
+    dA = dtc * A[None, None, None, :]               # (nc,B,c,H) negative
+    seg = jnp.cumsum(dA, axis=2)                    # within-chunk cumulative
+    seg_total = seg[:, :, -1, :]                    # (nc,B,H)
+
+    dtx = xc * dtc[..., None]                       # (nc,B,c,H,P)
+
+    # chunk states: sum_s B_s (dt x)_s exp(seg_last - seg_s)
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - seg)        # (nc,B,c,H)
+    states = jnp.einsum("nbchk,nbchp,nbch->nbhpk", Bc, dtx, decay_to_end)
+
+    def scan_body(carry, inp):
+        st, tot = inp                                # (B,H,P,N), (B,H)
+        new = carry * jnp.exp(tot)[:, :, None, None] + st
+        return new, carry                            # emit state BEFORE chunk
+
+    init = jnp.zeros_like(states[0])
+    final, prev_states = jax.lax.scan(scan_body, init, (states, seg_total))
+
+    # inter-chunk: y_l += C_l . prev_state * exp(seg_l)
+    y_inter = jnp.einsum("nbchk,nbhpk,nbch->nbchp", Cc, prev_states,
+                         jnp.exp(seg))
+
+    # intra-chunk: masked attention-like term
+    cb = jnp.einsum("nbchk,nbshk->nbhcs", Cc, Bc)    # (nc,B,H,c,c)
+    seg_l = seg.transpose(0, 1, 3, 2)                # (nc,B,H,c)
+    decay = jnp.exp(seg_l[..., :, None] - seg_l[..., None, :])   # (nc,B,H,c,c)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = jnp.where(mask[None, None, None], cb * decay, 0.0)
+    y_intra = jnp.einsum("nbhcs,nbshp->nbchp", m, dtx)
+
+    y = (y_inter + y_intra).transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, Pd)
+    return y, final
+
+
+def ssm_block(params, x, cfg, *, ssm_cache=None, compute_dtype=jnp.bfloat16,
+              chunk: int = 256):
+    """Full mamba2 mixer.  x: (B,S,D).  Returns (y (B,S,D), new_cache)."""
+    Bb, S, D = x.shape
+    H, Pd, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    di = cfg.d_ssm_inner
+
+    z = x @ params["wz"].astype(compute_dtype)                  # (B,S,di)
+    xr = x @ params["wx"].astype(compute_dtype)                 # (B,S,di)
+    bc = x @ params["wbc"].astype(compute_dtype)                # (B,S,2GN)
+    dt_raw = x @ params["wdt"].astype(compute_dtype)            # (B,S,H)
+
+    tail_x = tail_bc = None
+    if ssm_cache is not None:
+        tail_x, tail_bc = ssm_cache["conv_x"], ssm_cache["conv_bc"]
+    xr, new_tail_x = _causal_conv(xr, params["conv_x"].astype(compute_dtype),
+                                  tail_x)
+    bc, new_tail_bc = _causal_conv(bc, params["conv_bc"].astype(compute_dtype),
+                                   tail_bc)
+    xr, bc = jax.nn.silu(xr), jax.nn.silu(bc)
+
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    B_ = _group_to_heads(B_.reshape(Bb, S, G, N), H)
+    C_ = _group_to_heads(C_.reshape(Bb, S, G, N), H)
+    xh = xr.reshape(Bb, S, H, Pd)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))           # (H,) < 0
+
+    if ssm_cache is not None and S == 1:
+        # ---- decode: O(1) recurrent update
+        st = ssm_cache["state"]                                 # (B,H,P,N)
+        dt1 = dt[:, 0]                                          # (B,H)
+        decay = jnp.exp(dt1 * A[None, :])
+        upd = jnp.einsum("bhk,bhp,bh->bhpk", B_[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32), dt1)
+        st = st * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhk,bhpk->bhp", C_[:, 0].astype(jnp.float32), st)
+        y = y[:, None].astype(compute_dtype)                    # (B,1,H,P)
+        new_state = st
+    else:
+        prev = None if ssm_cache is None else ssm_cache["state"]
+        y, new_state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                                   B_.astype(jnp.float32),
+                                   C_.astype(jnp.float32), chunk)
+        if prev is not None:
+            # fold a pre-existing state into the first chunk contribution:
+            # y += C_l . prev * exp(cumsum dA); state' includes decayed prev.
+            seg_all = jnp.cumsum(dt * A[None, None, :], axis=1)  # (B,S,H)
+            y = y + jnp.einsum("bshk,bhpk,bsh->bshp", C_.astype(jnp.float32),
+                               prev, jnp.exp(seg_all))
+            new_state = new_state + prev * jnp.exp(
+                seg_all[:, -1])[:, :, None, None]
+        y = y.astype(compute_dtype)
+
+    y = y + xh * params["d_skip"].astype(compute_dtype)[None, None, :, None]
+    y = y.reshape(Bb, S, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y * jax.nn.silu(z)
+    g32 = g.astype(jnp.float32)
+    g = (g32 * jax.lax.rsqrt(jnp.mean(g32 * g32, -1, keepdims=True) + 1e-6))
+    g = (g * params["norm"].astype(jnp.float32)).astype(compute_dtype)
+    out = g @ params["w_out"].astype(compute_dtype)
+
+    new_cache = None
+    if ssm_cache is not None:
+        new_cache = {"state": new_state, "conv_x": new_tail_x,
+                     "conv_bc": new_tail_bc}
+    return out, new_cache
+
+
+def make_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    w = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, H, Pd, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, cfg.d_ssm_inner), dtype),
+        "conv_bc": jnp.zeros((batch, w - 1, 2 * cfg.ssm_groups * N), dtype),
+    }

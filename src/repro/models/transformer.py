@@ -1,0 +1,264 @@
+"""Layer-stack assembly: scan-over-layers decoders (uniform, hybrid-period),
+encoders, and encoder-decoder stacks.
+
+All stacks scan over stacked per-layer params (compile-once bodies — essential
+for the 80-cell dry-run on this 1-core container).  Heterogeneous archs:
+
+  * gemma3 local/global — uniform param structure; a per-layer ``is_global``
+    flag selects between two statically-shaped attention variants via
+    ``lax.cond`` inside the scan body.
+  * jamba 1:7 attn:mamba + alternating MoE — period-8 "super-block" scan; the
+    8 slots are unrolled inside the body (their kinds are consistent across
+    periods since kind(i) depends only on i mod 8 / i mod 2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp, mlp_defs, rmsnorm, rmsnorm_defs
+from repro.models.param import ParamDef, stack_defs
+
+
+# --------------------------------------------------------------- single layer
+
+def layer_defs(cfg, kind: str, mlp_kind: str, cross: bool = False):
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"norm1": rmsnorm_defs(d)}
+    if kind.startswith("attn"):
+        defs["attn"] = attn_mod.attention_defs(cfg)
+    else:
+        defs["ssm"] = ssm_mod.ssm_defs(cfg)
+    if cross:
+        defs["norm_x"] = rmsnorm_defs(d)
+        defs["cross"] = attn_mod.cross_attention_defs(cfg)
+    if mlp_kind == "dense":
+        defs["norm2"] = rmsnorm_defs(d)
+        defs["mlp"] = mlp_defs(d, cfg.d_ff)
+    elif mlp_kind == "moe":
+        defs["norm2"] = rmsnorm_defs(d)
+        defs["moe"] = moe_mod.moe_defs(cfg)
+    return defs
+
+
+def apply_layer(params, x, cfg, kind: str, mlp_kind: str, *, window: int = 0,
+                causal: bool = True, cache=None, cache_len=None, enc_out=None,
+                mode: str = "train", impl: str = "xla", moe_impl: str = "sliced",
+                compute_dtype=jnp.bfloat16, opts=None):
+    """One block. cache: per-layer cache slice (attn {k,v} or ssm state)."""
+    from repro.models.shard_ctx import constrain
+    eps = cfg.norm_eps
+    new_cache = {}
+    x = constrain(x, ("batch", "act_seq", None))
+    h = rmsnorm(params["norm1"], x, eps)
+    if kind.startswith("attn"):
+        out, kv = attn_mod.multihead_attention(
+            params["attn"], h, cfg, causal=causal, window=window,
+            kv_cache=None if cache is None else cache.get("kv"),
+            cache_len=cache_len, impl=impl, compute_dtype=compute_dtype,
+            opts=opts)
+        if kv is not None:
+            new_cache["kv"] = kv
+    else:
+        out, st = ssm_mod.ssm_block(
+            params["ssm"], h, cfg,
+            ssm_cache=None if cache is None else cache.get("ssm"),
+            compute_dtype=compute_dtype)
+        if st is not None:
+            new_cache["ssm"] = st
+    x = x + out
+
+    if "cross" in params:
+        h = rmsnorm(params["norm_x"], x, eps)
+        if mode == "decode":
+            out, _ = attn_mod.multihead_attention(
+                params["cross"], h, cfg, causal=False,
+                kv_cache=cache["cross"], cache_len=cache_len,
+                static_cache=True, impl=impl, compute_dtype=compute_dtype)
+            new_cache["cross"] = cache["cross"]
+        else:
+            # build the cross K/V cache from encoder output
+            out, ck = attn_mod.multihead_attention(
+                params["cross"], h, cfg, causal=False, kv_override=enc_out,
+                kv_cache={"k": jnp.zeros_like(enc_out, shape=(
+                    enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads,
+                    cfg.head_dim)), "v": jnp.zeros_like(enc_out, shape=(
+                        enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads,
+                        cfg.head_dim))},
+                cache_len=0, impl=impl, compute_dtype=compute_dtype)
+            new_cache["cross"] = ck
+        x = x + out
+
+    if mlp_kind == "dense":
+        x = x + mlp(params["mlp"], rmsnorm(params["norm2"], x, eps),
+                    compute_dtype)
+    elif mlp_kind == "moe":
+        x = x + moe_mod.moe_block(params["moe"], rmsnorm(params["norm2"], x, eps),
+                                  cfg, compute_dtype=compute_dtype,
+                                  moe_impl=moe_impl)
+    return x, (new_cache or None)
+
+
+# ------------------------------------------------------------- cache builders
+
+def make_layer_cache(cfg, kind: str, batch: int, max_len: int, cross_len: int = 0,
+                     dtype=jnp.bfloat16):
+    c = {}
+    if kind.startswith("attn"):
+        c["kv"] = {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)}
+    else:
+        c["ssm"] = ssm_mod.make_ssm_cache(cfg, batch, dtype)
+    if cross_len:
+        c["cross"] = {
+            "k": jnp.zeros((batch, cross_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cross_len, cfg.n_kv_heads, cfg.head_dim), dtype)}
+    return c
+
+
+# ----------------------------------------------------------- uniform decoder
+
+def uniform_stack_defs(cfg, cross: bool = False):
+    kinds, mlps = cfg.layer_kinds(), cfg.mlp_kinds()
+    base = layer_defs(cfg, kinds[0], mlps[0], cross=cross)
+    return stack_defs(base, cfg.n_layers)
+
+
+def _is_uniform(cfg) -> bool:
+    return not cfg.is_hybrid
+
+
+def apply_uniform_stack(params, x, cfg, *, caches=None, cache_len=None,
+                        enc_out=None, mode="train", impl="xla",
+                        moe_impl="sliced", remat=True,
+                        compute_dtype=jnp.bfloat16, opts=None):
+    """Scan over n_layers with stacked params. caches: stacked layer caches."""
+    kinds, mlps = cfg.layer_kinds(), cfg.mlp_kinds()
+    kind0, mlp0 = kinds[0], mlps[0]
+    has_global_mix = len(set(kinds)) > 1          # gemma3 local/global
+    is_global = jnp.asarray(
+        np.array([k == "attn_global" for k in kinds], dtype=bool))
+
+    def body(h, xs):
+        p, cache_i, glob_i = xs
+        kw = dict(cache=cache_i, cache_len=cache_len, enc_out=enc_out,
+                  mode=mode, impl=impl, moe_impl=moe_impl,
+                  compute_dtype=compute_dtype, opts=opts)
+        if has_global_mix:
+            h2, nc = jax.lax.cond(
+                glob_i,
+                lambda hh: apply_layer(p, hh, cfg, "attn", mlp0, window=0, **kw),
+                lambda hh: apply_layer(p, hh, cfg, "attn", mlp0,
+                                       window=cfg.sliding_window, **kw),
+                h)
+        else:
+            win = cfg.sliding_window if kind0 == "attn_local" else 0
+            h2, nc = apply_layer(p, h, cfg, kind0, mlp0, window=win, **kw)
+        return h2, nc
+
+    wrapped = jax.checkpoint(body, prevent_cse=False) if remat else body
+    xs = (params, caches, is_global)
+    x, new_caches = jax.lax.scan(wrapped, x, xs)
+    return x, new_caches
+
+
+# ----------------------------------------------------------- hybrid (period)
+
+def hybrid_stack_defs(cfg):
+    kinds, mlps = cfg.layer_kinds(), cfg.mlp_kinds()
+    period = cfg.attn_interval
+    assert cfg.n_layers % period == 0, "hybrid depth must be multiple of period"
+    n_periods = cfg.n_layers // period
+    slot_defs = {f"slot_{s}": layer_defs(cfg, kinds[s], mlps[s])
+                 for s in range(period)}
+    return stack_defs(slot_defs, n_periods)
+
+
+def apply_hybrid_stack(params, x, cfg, *, caches=None, cache_len=None,
+                       mode="train", impl="xla", moe_impl="sliced", remat=True,
+                       compute_dtype=jnp.bfloat16, opts=None):
+    kinds, mlps = cfg.layer_kinds(), cfg.mlp_kinds()
+    period = cfg.attn_interval
+
+    def body(h, xs):
+        p, cache_p = xs
+        new_caches = {}
+        for s in range(period):
+            ci = None if cache_p is None else cache_p.get(f"slot_{s}")
+            h, nc = apply_layer(
+                p[f"slot_{s}"], h, cfg, kinds[s], mlps[s],
+                cache=ci, cache_len=cache_len, mode=mode, impl=impl,
+                moe_impl=moe_impl, compute_dtype=compute_dtype, opts=opts)
+            if nc is not None:
+                new_caches[f"slot_{s}"] = nc
+        return h, (new_caches or None)
+
+    wrapped = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, new_caches = jax.lax.scan(wrapped, x, (params, caches))
+    return x, new_caches
+
+
+# ------------------------------------------------------------------- encoder
+
+def encoder_stack_defs(cfg):
+    base = {"norm1": rmsnorm_defs(cfg.d_model),
+            "attn": attn_mod.attention_defs(cfg),
+            "norm2": rmsnorm_defs(cfg.d_model),
+            "mlp": mlp_defs(cfg.d_model, cfg.d_ff)}
+    return stack_defs(base, cfg.encoder_layers)
+
+
+def apply_encoder_stack(params, x, cfg, *, impl="xla", remat=True,
+                        compute_dtype=jnp.bfloat16):
+    def body(h, p):
+        a, _ = attn_mod.multihead_attention(
+            p["attn"], rmsnorm(p["norm1"], h, cfg.norm_eps), cfg,
+            causal=False, impl=impl, compute_dtype=compute_dtype)
+        h = h + a
+        h = h + mlp(p["mlp"], rmsnorm(p["norm2"], h, cfg.norm_eps),
+                    compute_dtype)
+        return h, None
+
+    wrapped = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, _ = jax.lax.scan(wrapped, x, params)
+    return x
+
+
+def stack_defs_for(cfg):
+    if cfg.is_hybrid:
+        return hybrid_stack_defs(cfg)
+    return uniform_stack_defs(cfg, cross=cfg.is_encdec)
+
+
+def apply_stack(params, x, cfg, **kw):
+    if cfg.is_hybrid:
+        kw.pop("enc_out", None)
+        return apply_hybrid_stack(params, x, cfg, **kw)
+    return apply_uniform_stack(params, x, cfg, **kw)
+
+
+def make_stack_caches(cfg, batch: int, max_len: int, cross_len: int = 0,
+                      dtype=jnp.bfloat16):
+    """Stacked caches matching the scan layout."""
+    kinds = cfg.layer_kinds()
+    if cfg.is_hybrid:
+        period = cfg.attn_interval
+        n_periods = cfg.n_layers // period
+        one = {f"slot_{s}": make_layer_cache(cfg, kinds[s], batch, max_len,
+                                             dtype=dtype)
+               for s in range(period)}
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_periods,) + a.shape).copy(),
+            one)
+    one = make_layer_cache(cfg, kinds[0], batch, max_len, cross_len, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(),
+        one)

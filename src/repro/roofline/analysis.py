@@ -1,0 +1,153 @@
+"""Roofline analysis over dry-run artifacts.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, 16 GiB HBM.  Terms per (arch × shape × mesh) cell:
+
+  t_comp = parsed_FLOPs_per_device / PEAK_FLOPS
+  t_mem  = parsed_HBM_bytes_per_device / HBM_BW
+  t_coll = parsed_collective_bytes_per_device / LINK_BW
+
+The bottleneck is the max term; roofline fraction = t_comp / max(terms)
+(the share of the step the MXUs could actually be busy).  MODEL_FLOPS
+(6·N·D or 6·N_active·D) cross-checks the parsed FLOPs — the ratio catches
+remat/redundancy waste in the compiled module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import zstandard as zstd
+
+from repro.configs import SHAPES, get_config
+from repro.roofline.hlo_parse import analyze
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI, conservative single link)
+HBM_CAP = 16 * 2 ** 30
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    tag: str
+    n_devices: int
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_by_kind: Dict[str, float]
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    bottleneck: str
+    roofline_fraction: float
+    model_flops: float
+    useful_ratio: float        # MODEL_FLOPS / (parsed_flops × devices)
+    peak_gb: float
+    fits_hbm: bool
+    meta: Dict
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh}"
+                f"{('/' + self.tag) if self.tag else ''} | "
+                f"{self.t_comp * 1e3:.2f} | {self.t_mem * 1e3:.2f} | "
+                f"{self.t_coll * 1e3:.2f} | {self.bottleneck} | "
+                f"{self.roofline_fraction * 100:.0f}% | "
+                f"{self.useful_ratio * 100:.0f}% | {self.peak_gb:.1f} | "
+                f"{'✓' if self.fits_hbm else '✗'} |")
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def branch_weights_for(arch: str) -> Optional[List[float]]:
+    cfg = get_config(arch)
+    if cfg.global_interval > 0:
+        kinds = cfg.layer_kinds()
+        g = sum(k == "attn_global" for k in kinds) / len(kinds)
+        # jax.lax.cond lowers pred branches as (false, true)
+        return [1.0 - g, g]
+    return None
+
+
+def analyze_cell(json_path: str) -> CellRoofline:
+    meta = json.load(open(json_path))
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    txt = zstd.ZstdDecompressor().decompress(
+        open(hlo_path, "rb").read()).decode()
+    arch, shape, mesh = meta["arch"], meta["shape"], meta["mesh"]
+    costs = analyze(txt, branch_weights=branch_weights_for(arch))
+    n_dev = 512 if mesh == "pod2" else 256
+
+    t_comp = costs.flops / PEAK_FLOPS
+    t_mem = costs.hbm_bytes / HBM_BW
+    t_coll = costs.coll_bytes / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_max = max(terms.values()) or 1e-30
+
+    mf = model_flops_for(arch, shape)
+    parsed_total = costs.flops * n_dev
+    return CellRoofline(
+        arch=arch, shape=shape, mesh=mesh, tag=meta.get("tag", ""),
+        n_devices=n_dev,
+        flops_per_dev=costs.flops, hbm_bytes_per_dev=costs.hbm_bytes,
+        coll_bytes_per_dev=costs.coll_bytes,
+        coll_by_kind=dict(costs.coll_by_kind),
+        t_comp=t_comp, t_mem=t_mem, t_coll=t_coll, bottleneck=bottleneck,
+        roofline_fraction=t_comp / t_max,
+        model_flops=mf, useful_ratio=mf / parsed_total if parsed_total else 0.0,
+        peak_gb=meta.get("peak_gb", 0.0),
+        fits_hbm=meta.get("peak_gb", 0.0) <= HBM_CAP / 2 ** 30,
+        meta=meta)
+
+
+HEADER = ("| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+          "bottleneck | roofline | useful | GB/dev | fits |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def analyze_dir(dry_dir: str, mesh: str = "pod1", tag: str = "") -> List[CellRoofline]:
+    cells = []
+    for jp in sorted(glob.glob(os.path.join(dry_dir, f"*_{mesh}"
+                                            f"{('_' + tag) if tag else ''}"
+                                            ".json"))):
+        try:
+            cells.append(analyze_cell(jp))
+        except Exception as e:              # pragma: no cover
+            print(f"[roofline] failed {jp}: {e!r}")
+    return cells
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    cells = analyze_dir(args.dir, args.mesh, args.tag)
+    print(HEADER)
+    for c in cells:
+        print(c.row())
+
+
+if __name__ == "__main__":
+    main()

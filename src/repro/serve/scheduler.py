@@ -1,0 +1,181 @@
+"""Continuous-batching request schedulers — the thesis's two brokers, serving.
+
+Requests ≙ cloudlets, KV-cache slots ≙ VMs.  The scheduler binds queued
+requests to free slots:
+
+  * ``round_robin``  — next free slot in order (§5.1.1's RR broker).
+  * ``matchmaking``  — slots live in size buckets (max context length); a
+    request binds to the *smallest adequate* bucket, round-robining within the
+    candidates so large slots aren't monopolized (§5.1.2's fair matchmaking).
+
+The decode loop is a single jitted step over the whole slot batch; finished
+slots are refilled between steps (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int
+    arrived_step: int = 0
+    # filled by the engine:
+    slot: int = -1
+    output: Optional[List[int]] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SlotState:
+    length: int = 0              # valid cache length
+    budget: int = 0              # remaining new tokens
+    req: Optional[Request] = None
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, max_len: int, policy: str = "matchmaking",
+                 bucket_lens: Optional[List[int]] = None):
+        assert policy in ("round_robin", "matchmaking")
+        self.policy = policy
+        self.max_len = max_len
+        self.slots = [SlotState() for _ in range(n_slots)]
+        # matchmaking buckets: slot i serves contexts up to bucket_lens[i]
+        if bucket_lens is None:
+            bucket_lens = [max_len // 4] * (n_slots // 2) + \
+                          [max_len] * (n_slots - n_slots // 2)
+        self.bucket_lens = bucket_lens
+        self.queue: Deque[Request] = deque()
+        self._rr_cursor = 0
+        self._mm_counter = 0
+        self.dropped = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ----------------------------------------------------------- brokers
+    def _assign_round_robin(self, req) -> int:
+        n = len(self.slots)
+        for off in range(n):
+            i = (self._rr_cursor + off) % n
+            if self.slots[i].free and self.bucket_lens[i] >= self._need(req):
+                self._rr_cursor = (i + 1) % n
+                return i
+        return -1
+
+    def _assign_matchmaking(self, req) -> int:
+        need = self._need(req)
+        # adequate free slots, smallest bucket first (best fit)
+        cand = sorted((self.bucket_lens[i], i) for i, s in enumerate(self.slots)
+                      if s.free and self.bucket_lens[i] >= need)
+        if not cand:
+            return -1
+        # fairness: round-robin among equally-best candidates
+        best_len = cand[0][0]
+        ties = [i for l, i in cand if l == best_len]
+        pick = ties[self._mm_counter % len(ties)]
+        self._mm_counter += 1
+        return pick
+
+    def _need(self, req) -> int:
+        return len(req.prompt) + req.max_new_tokens
+
+    def schedule(self) -> List[Request]:
+        """Bind queued requests to free slots; returns newly placed requests."""
+        placed = []
+        pending = len(self.queue)
+        for _ in range(pending):
+            req = self.queue.popleft()
+            if self._need(req) > self.max_len:
+                self.dropped += 1
+                continue
+            slot = (self._assign_round_robin(req) if self.policy == "round_robin"
+                    else self._assign_matchmaking(req))
+            if slot < 0:
+                self.queue.append(req)       # stay queued (waiting queue)
+                continue
+            req.slot = slot
+            req.output = []
+            self.slots[slot] = SlotState(length=0, budget=req.max_new_tokens,
+                                         req=req)
+            placed.append(req)
+        return placed
+
+    def release(self, slot: int):
+        self.slots[slot] = SlotState()
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.free]
+
+    def utilization(self) -> float:
+        return 1.0 - sum(s.free for s in self.slots) / len(self.slots)
+
+
+class ServeEngine:
+    """Continuous batching over a fixed slot batch with one jitted decode."""
+
+    def __init__(self, model, params, n_slots: int, max_len: int,
+                 policy: str = "matchmaking"):
+        from repro.serve.step import make_decode_step
+        self.model = model
+        self.params = params
+        self.sched = Scheduler(n_slots, max_len, policy)
+        self.caches = model.make_caches(n_slots, max_len)
+        self.lengths = np.zeros(n_slots, np.int32)
+        self.tokens = np.zeros((n_slots, 1), np.int32)
+        self._decode = jax.jit(make_decode_step(model))
+        self.steps = 0
+
+    def _prefill_one(self, req: Request):
+        """Prefill a single request into its slot (per-slot cache update)."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        for t in range(toks.shape[1]):
+            nxt, self.caches = self._decode(
+                self.params, self.caches,
+                jnp.full((len(self.sched.slots), 1), 0, jnp.int32).at[
+                    req.slot, 0].set(int(req.prompt[t])),
+                jnp.int32(t))
+        self.lengths[req.slot] = len(req.prompt)
+        self.tokens[req.slot, 0] = int(np.asarray(nxt)[req.slot, 0])
+
+    def run(self, max_steps: int = 64) -> Dict:
+        done: List[Request] = []
+        while self.steps < max_steps:
+            for req in self.sched.schedule():
+                self._prefill_one(req)
+            if not self.sched.active_slots():
+                if not self.sched.queue:
+                    break
+                self.steps += 1
+                continue
+            cache_len = int(self.lengths.max())
+            nxt, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.tokens),
+                jnp.int32(cache_len))
+            nxt = np.asarray(nxt)
+            self.steps += 1
+            for i in self.sched.active_slots():
+                s = self.sched.slots[i]
+                s.req.output.append(int(nxt[i, 0]))
+                self.tokens[i, 0] = nxt[i, 0]
+                self.lengths[i] += 1
+                s.budget -= 1
+                if s.budget <= 0:
+                    s.req.done = True
+                    done.append(s.req)
+                    self.sched.release(i)
+        return {"completed": done, "steps": self.steps,
+                "dropped": self.sched.dropped,
+                "utilization": self.sched.utilization()}

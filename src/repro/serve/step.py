@@ -1,0 +1,66 @@
+"""Serving steps: prefill and single-token decode (continuous-batching inner
+loops).  ``serve_step`` here is what the decode_* / long_* dry-run cells lower:
+one new token against a KV/SSM cache of the cell's seq_len."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask_pad(logits, vocab):
+    ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < vocab, logits, -jnp.inf)
+
+
+def sample_tokens(logits, key, *, temperature: float = 0.0, top_k: int = 0,
+                  top_p: float = 1.0):
+    """Sample next tokens from (B, V) logits.
+
+    temperature == 0 -> greedy.  top_k: keep the k best; top_p: nucleus
+    sampling (smallest set with cumulative probability >= top_p).
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep tokens until cumulative prob reaches top_p (always >= 1 token)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, caches):
+        logits, caches = model.prefill(params, batch, caches)
+        logits = _mask_pad(logits, model.cfg.vocab_size)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+    return prefill_step
+
+
+def make_decode_step(model, sample: str = "greedy"):
+    def decode_step(params, caches, tokens, cache_len):
+        logits, caches = model.decode(params, tokens, caches, cache_len)
+        logits = _mask_pad(logits, model.cfg.vocab_size)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches
+    return decode_step
+
+
+def make_sampling_decode_step(model, *, temperature: float = 1.0,
+                              top_k: int = 0, top_p: float = 1.0):
+    """Decode step with temperature/top-k/nucleus sampling (serving mode)."""
+    def decode_step(params, caches, tokens, cache_len, key):
+        logits, caches = model.decode(params, tokens, caches, cache_len)
+        logits = _mask_pad(logits, model.cfg.vocab_size)
+        nxt = sample_tokens(logits[:, -1], key, temperature=temperature,
+                            top_k=top_k, top_p=top_p)
+        return nxt[:, None], caches
+    return decode_step

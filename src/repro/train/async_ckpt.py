@@ -1,0 +1,70 @@
+"""Asynchronous checkpointing: the training loop never blocks on disk.
+
+At scale, synchronous checkpoint writes stall every chip for seconds; the
+standard production pattern is: snapshot device state to host (fast,
+device->host copy only), hand the host buffers to a writer thread, and keep
+training.  ``wait()`` joins the writer (called before restore / at exit).
+A failed in-flight write never corrupts the latest checkpoint (the underlying
+``checkpoint.save`` is atomic: tmp dir + rename).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Optional
+
+import jax
+
+from repro.train import checkpoint as ck
+
+
+class AsyncCheckpointer:
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._pending = 0
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            host_state, step, cursor = item
+            try:
+                ck.save(self.ckpt_dir, host_state, step, data_cursor=cursor,
+                        keep=self.keep)
+            except BaseException as e:          # surfaced on next save/wait
+                self._err = e
+            finally:
+                with self._lock:
+                    self._pending -= 1
+                self._q.task_done()
+
+    def save(self, state, step: int, data_cursor: int = 0):
+        """Device->host snapshot now; disk write in the background."""
+        if self._err:
+            raise RuntimeError("async checkpoint writer failed") from self._err
+        host_state = jax.device_get(state)       # snapshot (blocks on compute
+        with self._lock:                         # only, not on disk)
+            self._pending += 1
+        self._q.put((host_state, int(step), int(data_cursor)))
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._pending
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise RuntimeError("async checkpoint writer failed") from self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10)

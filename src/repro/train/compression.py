@@ -1,0 +1,92 @@
+"""Distributed-optimization tricks: int8 error-feedback gradient compression
+and an explicit ring reduce-scatter (compute/comm overlap building block).
+
+Cloud²Sim §4.1.2 lowers its wire cost with BINARY serialization of distributed
+objects; the training-runtime analogue is compressing the gradient collective:
+  * quantize each gradient leaf to int8 with a per-leaf scale (the "custom
+    serializer"),
+  * keep the quantization error as residual feedback added to the next step's
+    gradient (convergence-safe, Seide et al. / Karimireddy et al.),
+  * all-reduce the int8 payload (4× fewer wire bytes than f32; 2× vs bf16).
+
+``ring_reduce_scatter`` is the shard_map/ppermute building block that a real
+TPU deployment uses to overlap gradient reduction with the backward pass.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ----------------------------------------------------- int8 error feedback
+
+def init_residuals(grads):
+    return jax.tree_util.tree_map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                  grads)
+
+
+def compress(g, residual):
+    """f32 grad + residual -> (int8 payload, scale, new residual)."""
+    g = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g - deq
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grads(grads, residuals):
+    """Tree-wise error-feedback compression. Returns (deq_grads, new_res,
+    wire_bytes_saved_fraction)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    deq, res = [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = compress(g, r)
+        deq.append(decompress(q, s))
+        res.append(nr)
+    return (jax.tree_util.tree_unflatten(treedef, deq),
+            jax.tree_util.tree_unflatten(treedef, res), 0.75)
+
+
+# ----------------------------------------------------- ring reduce-scatter
+
+def ring_reduce_scatter(x, mesh: Mesh, axis: str = "data"):
+    """Explicit (N−1)-step ring reduce-scatter via ``ppermute``: the chunked
+    schedule a TPU deployment interleaves with producer compute (each chunk's
+    hop can overlap the next chunk's local reduction).
+
+    x: (n_members, payload) — row m is member m's local contribution
+    (payload % n_members == 0).  Returns the reduced scatter: member j ends
+    with sum_m x[m, chunk_j]; the shard_map output is (n, payload // n).
+
+    Schedule: buf_j(0) = c_j[(j−1) mod n]; each step sends j→j+1 and the
+    receiver adds its local copy of the chunk the buffer now represents
+    (idx(j,s) = (j−1−s) mod n, so after n−1 steps member j holds chunk j).
+    """
+    n = mesh.shape[axis]
+
+    def body(xl):
+        row = xl[0]                                   # (payload,)
+        chunks = row.reshape(n, -1)                   # (n, k)
+        idx = jax.lax.axis_index(axis)
+        perm = [(j, (j + 1) % n) for j in range(n)]
+        buf = jnp.take(chunks, (idx - 1) % n, axis=0)
+
+        def step(s, buf):
+            buf = jax.lax.ppermute(buf, axis, perm)
+            mine = jnp.take(chunks, (idx - 1 - s) % n, axis=0)
+            return buf + mine
+
+        buf = jax.lax.fori_loop(1, n, step, buf)
+        return buf[None]                              # (1, k) per member
+
+    return shard_map(body, mesh=mesh, in_specs=(P(axis),),
+                     out_specs=P(axis), check_vma=False)(x)

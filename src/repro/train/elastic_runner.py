@@ -1,0 +1,129 @@
+"""Elastic training runner: the IntelligentAdaptiveScaler driving a real
+training loop with checkpoint → re-mesh → re-shard restore at scale events.
+
+This is the thesis's Fig 3.6/3.7 deployment as a training runtime: the
+controller watches health (load ≙ step-time/target), flags scale-out/in with
+hysteresis, and the runner rebuilds the data mesh over more/fewer devices
+without losing a step (synchronous-backup equivalent: the checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.elastic import Decision, ElasticController
+from repro.core.health import HealthConfig, HealthSample
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.train import checkpoint as ck
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class ElasticRunReport:
+    losses: List[float]
+    scale_events: List
+    steps: int
+    final_n_instances: int
+    restarts: int
+
+
+def _mesh_of(n: int) -> Mesh:
+    devs = jax.devices()[:n]
+    return Mesh(np.array(devs), ("data",))
+
+
+def _shardings_for(model, mesh):
+    from repro.launch.mesh import state_shardings
+    return state_shardings(model, mesh)
+
+
+def run_elastic_training(model, *, steps: int, data_cfg: DataConfig,
+                         opt_cfg: Optional[AdamWConfig] = None,
+                         health_cfg: Optional[HealthConfig] = None,
+                         ckpt_dir: Optional[str] = None,
+                         start_instances: int = 1,
+                         inject_failure_at: Optional[int] = None,
+                         seed: int = 0) -> ElasticRunReport:
+    """Train with elastic data-parallel width over the local device pool.
+
+    inject_failure_at: simulate a member crash at that step — the runner
+    restores from the latest checkpoint (fault-tolerance path).
+    """
+    opt_cfg = opt_cfg or AdamWConfig(warmup_steps=5, total_steps=steps)
+    health_cfg = health_cfg or HealthConfig()
+    max_n = len(jax.devices())
+    health_cfg = dataclasses.replace(
+        health_cfg, max_instances=min(health_cfg.max_instances, max_n))
+    n = min(start_instances, max_n)
+
+    mesh = _mesh_of(n)
+    state = init_train_state(model, jax.random.PRNGKey(seed))
+    step_fn = make_train_step(model, opt_cfg)
+    shard = _shardings_for(model, mesh)
+    state = jax.device_put(state, shard)
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+    pipe = DataPipeline(data_cfg, model.cfg)
+
+    losses, restarts = [], 0
+    controller_holder = {}
+
+    def remesh(new_n: int):
+        nonlocal mesh, state, jit_step, n
+        new_n = max(1, min(new_n, max_n))
+        if new_n == n:
+            return
+        # checkpoint -> rebuild mesh -> re-shard restore (step-boundary elastic)
+        if ckpt_dir:
+            ck.save(ckpt_dir, state, int(jax.device_get(state["step"])),
+                    data_cursor=pipe.cursor)
+        host_state = jax.device_get(state)
+        n = new_n
+        mesh = _mesh_of(n)
+        new_shard = _shardings_for(model, mesh)
+        state = jax.device_put(host_state, new_shard)
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    controller = ElasticController(health_cfg, n, remesh_fn=remesh)
+    controller_holder["c"] = controller
+
+    i = 0
+    while i < steps:
+        if inject_failure_at is not None and i == inject_failure_at and ckpt_dir:
+            # simulated member crash: recover from the last checkpoint
+            latest = ck.latest_step(ckpt_dir)
+            if latest is not None:
+                r = ck.restore(ckpt_dir, state, shardings=_shardings_for(
+                    model, mesh))
+                state = r["state"]
+                pipe.cursor = r["data_cursor"]
+                i = r["step"]
+                restarts += 1
+            inject_failure_at = None
+            continue
+
+        batch = pipe.at(pipe.cursor)
+        pipe.cursor += 1
+        t0 = time.perf_counter()
+        state, metrics = jit_step(state, batch)
+        loss = float(jax.device_get(metrics["loss"]))
+        dt = time.perf_counter() - t0
+        losses.append(loss)
+        controller.on_step(HealthSample(
+            step=i, step_time=dt, loss=loss,
+            grad_norm=float(jax.device_get(metrics.get("grad_norm", 0.0)))))
+        if ckpt_dir and (i + 1) % 10 == 0:
+            ck.save(ckpt_dir, state, i + 1, data_cursor=pipe.cursor)
+        i += 1
+
+    return ElasticRunReport(losses=losses,
+                            scale_events=controller.ias.state.history,
+                            steps=i, final_n_instances=controller.n_instances,
+                            restarts=restarts)

@@ -1,0 +1,100 @@
+"""Jittable train step: microbatched gradient accumulation + AdamW.
+
+The step is written against *global* (pjit-logical) arrays; the SPMD
+partitioner inserts the gradient all-reduce/reduce-scatter collectives implied
+by the parameter/batch shardings (the "Hazelcast does the distribution"
+principle — logic is written once, placement follows the data grid).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def init_train_state(model, key, moments_dtype=jnp.float32):
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, moments_dtype),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model, moments_dtype=jnp.float32):
+    from repro.models.param import abstract_params
+    defs = model.defs()
+    p = abstract_params(defs)
+    zer = lambda s: jax.ShapeDtypeStruct(s.shape, moments_dtype)
+    return {"params": p,
+            "opt": {"m": jax.tree_util.tree_map(zer, p),
+                    "v": jax.tree_util.tree_map(zer, p)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, n_microbatch: int = 1,
+                    constrain_grads: bool = True, grad_dtype=jnp.float32):
+    """Returns step(state, batch) -> (state, metrics).
+
+    batch leaves have leading global-batch dim B; with n_microbatch > 1 the
+    batch is split (B = n * b) and gradients are accumulated in a scan —
+    bounding live activation memory (remat keeps only per-layer carries).
+
+    constrain_grads: pin per-microbatch gradients to the parameter sharding —
+    the SPMD partitioner then lowers the FSDP all-gather transpose to a
+    reduce-scatter instead of a full all-reduce (§Perf iteration h3).
+    """
+
+    def loss_for_grad(params, mb):
+        loss, metrics = model.loss_fn(params, mb)
+        return loss, metrics
+
+    grad_fn_raw = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def grad_fn(params, mb):
+        out, grads = grad_fn_raw(params, mb)
+        if constrain_grads:
+            from repro.models.param import logical_specs
+            from repro.models.shard_ctx import constrain, current_rules
+            if current_rules() is not None:
+                specs = logical_specs(model.defs())
+                grads = jax.tree_util.tree_map(
+                    lambda g, sp: constrain(g, sp), grads, specs,
+                    is_leaf=lambda x: isinstance(x, tuple) and all(
+                        isinstance(e, (str, type(None))) for e in x))
+        return out, grads
+
+    def step(state, batch):
+        params = state["params"]
+
+        if n_microbatch == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0] // n_microbatch
+                return x.reshape(n_microbatch, b, *x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), params)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(grad_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (grads, loss_sum), _ = jax.lax.scan(accum, (zero_g, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatch, grads)
+            loss = loss_sum / n_microbatch
+            metrics = {"loss": loss, "tokens": jnp.float32(0)}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, state["opt"], state["step"])
+        metrics = dict(metrics, **opt_metrics)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return step

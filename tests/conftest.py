@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run's 512 fake devices are
+# configured ONLY inside launch/dryrun.py / benchmark subprocesses).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

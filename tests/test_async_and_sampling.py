@@ -1,0 +1,68 @@
+"""Async checkpointing and decode sampling."""
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.step import sample_tokens
+from repro.train import checkpoint as ck
+from repro.train.async_ckpt import AsyncCheckpointer
+
+
+def test_async_checkpoint_roundtrip():
+    state = {"w": jnp.arange(32.0).reshape(4, 8), "step": jnp.int32(3)}
+    with tempfile.TemporaryDirectory() as d:
+        acp = AsyncCheckpointer(d)
+        acp.save(state, step=3, data_cursor=30)
+        acp.save(state, step=4, data_cursor=40)
+        acp.wait()
+        assert ck.latest_step(d) == 4
+        r = ck.restore(d, state)
+        np.testing.assert_array_equal(np.asarray(r["state"]["w"]),
+                                      np.asarray(state["w"]))
+        assert r["data_cursor"] == 40
+        acp.close()
+
+
+def test_async_checkpoint_nonblocking():
+    state = {"w": jnp.zeros((256, 256))}
+    with tempfile.TemporaryDirectory() as d:
+        acp = AsyncCheckpointer(d)
+        t0 = time.perf_counter()
+        acp.save(state, step=1)
+        enqueue_s = time.perf_counter() - t0
+        acp.wait()
+        acp.close()
+        assert enqueue_s < 2.0      # snapshot only; write happens off-thread
+        assert ck.latest_step(d) == 1
+
+
+def test_sampling_greedy_and_temperature():
+    logits = jnp.array([[0.0, 5.0, 1.0, -2.0]])
+    key = jax.random.PRNGKey(0)
+    assert int(sample_tokens(logits, key, temperature=0.0)[0]) == 1
+    # low temperature concentrates on the argmax
+    hits = [int(sample_tokens(logits, jax.random.fold_in(key, i),
+                              temperature=0.1)[0]) for i in range(16)]
+    assert all(h == 1 for h in hits)
+
+
+def test_sampling_top_k_restricts_support():
+    logits = jnp.array([[1.0, 5.0, 4.0, -2.0]])
+    key = jax.random.PRNGKey(1)
+    draws = {int(sample_tokens(logits, jax.random.fold_in(key, i),
+                               temperature=2.0, top_k=2)[0])
+             for i in range(64)}
+    assert draws <= {1, 2}
+
+
+def test_sampling_top_p_restricts_support():
+    # p(1)=.88 p(2)=.12 others ~0: top_p=0.5 -> only token 1 survives
+    logits = jnp.array([[0.0, 10.0, 8.0, -10.0]])
+    key = jax.random.PRNGKey(2)
+    draws = {int(sample_tokens(logits, jax.random.fold_in(key, i),
+                               temperature=1.0, top_p=0.5)[0])
+             for i in range(32)}
+    assert draws == {1}

@@ -1,0 +1,56 @@
+"""Arch registry: all 10 assigned architectures with verified parameter counts."""
+import pytest
+
+from repro.configs import get_config, list_archs, SHAPES
+
+EXPECTED = {
+    "smollm-360m": (0.30e9, 0.45e9),
+    "gemma3-4b": (3.5e9, 4.4e9),
+    "llama3-8b": (7.5e9, 8.5e9),
+    "deepseek-7b": (6.5e9, 7.3e9),
+    "olmoe-1b-7b": (6.5e9, 7.3e9),
+    "grok-1-314b": (300e9, 330e9),
+    "llava-next-mistral-7b": (6.9e9, 7.6e9),
+    "seamless-m4t-medium": (0.55e9, 0.9e9),
+    "jamba-v0.1-52b": (49e9, 54e9),
+    "mamba2-370m": (0.33e9, 0.42e9),
+}
+
+ACTIVE = {"olmoe-1b-7b": (1.0e9, 1.6e9), "grok-1-314b": (70e9, 90e9),
+          "jamba-v0.1-52b": (10e9, 14e9)}
+
+
+def test_all_archs_registered():
+    assert sorted(list_archs()) == sorted(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_param_counts(arch):
+    lo, hi = EXPECTED[arch]
+    n = get_config(arch).param_count()
+    assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B outside [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", sorted(ACTIVE))
+def test_active_params(arch):
+    lo, hi = ACTIVE[arch]
+    n = get_config(arch).active_param_count()
+    assert lo <= n <= hi
+
+
+def test_long_context_applicability():
+    long_ok = {a for a in list_archs()
+               if any(s.name == "long_500k" for s in get_config(a).shapes())}
+    assert long_ok == {"gemma3-4b", "jamba-v0.1-52b", "mamba2-370m"}
+
+
+def test_padded_vocab_shards():
+    for a in list_archs():
+        assert get_config(a).padded_vocab % 256 == 0
+
+
+def test_cell_count():
+    """The assignment's 40 (arch x shape) cells = 33 lowered + 7 documented skips."""
+    cells = sum(len(get_config(a).shapes()) for a in list_archs())
+    skips = sum(len(get_config(a).skipped_shapes()) for a in list_archs())
+    assert cells == 33 and skips == 7 and cells + skips == 40

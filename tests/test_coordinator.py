@@ -1,0 +1,38 @@
+"""Multi-tenant Coordinator (§3.1.2): tenants run over sub-meshes; the
+coordinator aggregates health and scaling maps."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coordinator import Coordinator
+from repro.core.cloudsim import SimulationConfig, run_simulation
+from repro.core.mapreduce import MapReduceEngine, make_corpus, word_count_job
+
+
+def test_two_tenants_share_pool():
+    coord = Coordinator()
+
+    def t1(mesh, ctx):
+        r = run_simulation(SimulationConfig(n_vms=8, n_cloudlets=16), mesh)
+        return {"makespan": r.makespan}
+
+    def t2(mesh, ctx):
+        corpus = jnp.asarray(make_corpus(2, 128, 32))
+        out = MapReduceEngine(mesh, backend="infinispan").run(
+            word_count_job(32), corpus)
+        return {"total": int(np.asarray(out).sum())}
+
+    coord.register("cluster1", t1, n_devices=1)
+    coord.register("cluster2", t2, n_devices=1)
+    results = coord.run_all()
+    assert results["cluster1"]["makespan"] > 0
+    assert results["cluster2"]["total"] == 2 * 128
+    rep = coord.report()
+    assert rep["tenants"] == {"cluster1": "done", "cluster2": "done"}
+    assert set(rep["health"]) == {"cluster1", "cluster2"}
+
+
+def test_health_map_keyed_by_tenant():
+    coord = Coordinator()
+    coord.register("a", lambda mesh, ctx: {}, n_devices=1)
+    coord.run_all()
+    assert "wall_s" in coord.health_map["a"]

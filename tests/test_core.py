@@ -1,0 +1,171 @@
+"""Core middleware: DES determinism, MapReduce backends, partitioning, grid
+backups, elastic scaling, speedup model."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core.cloudsim import (SimulationConfig, run_simulation,
+                                 matchmaking_assign, simulate_completion)
+from repro.core.elastic import Decision, ElasticController
+from repro.core.grid import DataGrid
+from repro.core.health import HealthConfig, HealthSample
+from repro.core.mapreduce import MapReduceEngine, make_corpus, word_count_job
+from repro.core.partition import (PartitionTable, get_partition_final,
+                                  get_partition_init, partition_ranges)
+from repro.core.speedup import SpeedupModel, model_from_roofline
+
+
+def mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+@pytest.mark.parametrize("broker", ["round_robin", "matchmaking"])
+def test_des_runs_and_is_deterministic(broker):
+    cfg = SimulationConfig(n_vms=20, n_cloudlets=40, broker=broker)
+    r1 = run_simulation(cfg, mesh1())
+    r2 = run_simulation(cfg, mesh1())
+    assert np.array_equal(r1.vm_assign, r2.vm_assign)
+    np.testing.assert_allclose(r1.finish_times, r2.finish_times)
+    assert r1.makespan > 0
+
+
+def test_matchmaking_respects_requirements():
+    cfg = SimulationConfig(n_vms=16, n_cloudlets=64, broker="matchmaking")
+    r = run_simulation(cfg, mesh1())
+    # every assigned VM id must be a valid VM
+    assert (r.vm_assign[:64] < 16).all() and (r.vm_assign[:64] >= 0).all()
+    # fairness: no VM monopolized (each adequate VM gets a bounded share)
+    counts = np.bincount(r.vm_assign[:64], minlength=16)
+    assert counts.max() <= 64  # sanity
+    assert (counts > 0).sum() >= 4  # spread over multiple VMs
+
+
+def test_time_shared_completion_waves():
+    # two cloudlets of equal length on one VM finish together at 2x serial time
+    finish, makespan = jax.jit(simulate_completion)(
+        jnp.array([0, 0], jnp.int32), jnp.array([100.0, 100.0]),
+        jnp.array([10.0]), jnp.array([True, True]))
+    np.testing.assert_allclose(np.asarray(finish), [20.0, 20.0], rtol=1e-5)
+    # a shorter cloudlet frees capacity: 100 and 200 MI on 10 MIPS
+    finish, _ = jax.jit(simulate_completion)(
+        jnp.array([0, 0], jnp.int32), jnp.array([100.0, 200.0]),
+        jnp.array([10.0]), jnp.array([True, True]))
+    np.testing.assert_allclose(np.asarray(finish), [20.0, 30.0], rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["hazelcast", "infinispan"])
+def test_mapreduce_word_count(backend):
+    corpus = make_corpus(4, 256, vocab=32)
+    eng = MapReduceEngine(mesh1(), backend=backend)
+    out = eng.run(word_count_job(32), jnp.asarray(corpus))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.bincount(corpus.reshape(-1), minlength=32))
+
+
+def test_mapreduce_kernel_backend():
+    corpus = make_corpus(2, 256, vocab=64)
+    eng = MapReduceEngine(mesh1(), backend="hazelcast")
+    out = eng.run(word_count_job(64, use_kernel=True), jnp.asarray(corpus))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.bincount(corpus.reshape(-1), minlength=64))
+
+
+def test_partition_util_paper_semantics():
+    # the thesis's getPartitionInit/Final worked example
+    assert partition_ranges(10, 4) == [(0, 3), (3, 6), (6, 9), (9, 10)]
+    assert get_partition_init(271, 0, 4) == 0
+    assert get_partition_final(271, 3, 4) == 271
+
+
+def test_partition_table_minimal_movement():
+    pt = PartitionTable(n_instances=4)
+    moved = pt.rebalance(5)
+    assert moved <= 271 // 5 + 2
+    load = pt.load()
+    assert load.max() - load.min() <= 1
+
+
+def test_grid_backup_restore():
+    grid = DataGrid(mesh1(), backup_count=1)
+    v = grid.put("x", jnp.arange(16.0))
+    restored = grid.restore_from_backup("x", lost_member=0)
+    np.testing.assert_array_equal(np.asarray(restored), np.arange(16.0))
+
+
+def test_grid_binary_format_is_bf16():
+    grid = DataGrid(mesh1())
+    v = grid.put("b", jnp.ones((4,), jnp.float32), in_memory_format="BINARY")
+    assert v.dtype == jnp.bfloat16
+
+
+def test_elastic_hysteresis_and_bounds():
+    cfg = HealthConfig(target_step_time=1.0, time_between_scaling=3, window=2,
+                       max_instances=8)
+    ctl = ElasticController(cfg, n_instances=2)
+    decisions = [int(ctl.on_step(HealthSample(step=i, step_time=2.0, loss=1.0,
+                                              grad_norm=1.0)))
+                 for i in range(12)]
+    outs = [i for i, d in enumerate(decisions) if d == 1]
+    assert outs and all(b - a >= 3 for a, b in zip(outs, outs[1:]))
+    assert ctl.n_instances <= 8
+
+
+def test_elastic_scale_in_on_low_load():
+    cfg = HealthConfig(target_step_time=1.0, time_between_scaling=2, window=2,
+                       min_threshold=0.5)
+    ctl = ElasticController(cfg, n_instances=4)
+    for i in range(8):
+        ctl.on_step(HealthSample(step=i, step_time=0.1, loss=1.0, grad_norm=1.0))
+    assert ctl.n_instances < 4
+
+
+def test_speedup_model_regimes():
+    # §5.1.1's four cases emerge from the term balance
+    pos = SpeedupModel(t1=1000.0, k=0.999, c_per_n=0.1, fixed=1.0)
+    assert pos.regime([1, 2, 3, 4, 5, 6]) == "positive"
+    neg = SpeedupModel(t1=4.0, k=0.2, c_per_n=1.0, fixed=1.0)
+    assert neg.regime([1, 2, 3, 4, 5, 6]) == "negative"
+    common = SpeedupModel(t1=100.0, k=0.98, c_per_n=4.0, fixed=1.0)
+    assert common.regime([1, 2, 3, 4, 5, 6]) == "positive-then-negative"
+
+
+def test_speedup_model_identities():
+    m = SpeedupModel(t1=100.0, k=0.9, c_per_n=0.5)
+    n = 4
+    s = m.speedup(n)
+    assert abs(m.efficiency(n) - s / n) < 1e-12
+    assert abs(m.improvement_pct(n) - (1 - 1 / s) * 100) < 1e-9
+
+
+def test_model_from_roofline_theta():
+    m = model_from_roofline(100.0, 0.95, coll_bytes_per_step=1e9,
+                            working_set_bytes=64 * 2 ** 30)
+    # once 8 nodes provide 128GiB, theta kicks in
+    assert m.t_n(8, 8) < m.t_n(8, 2)
+
+
+def test_executor_reduce_kinds():
+    from repro.core.executor import DistributedExecutor
+    import jax.numpy as jnp
+    ex = DistributedExecutor(mesh1())
+    data = jnp.arange(8.0)
+    assert float(ex.map_reduce(lambda d: d.sum(), "sum", data)) == 28.0
+    assert float(ex.map_reduce(lambda d: d.max(), "max", data)) == 7.0
+    cat = ex.map_reduce(lambda d: d * 2, "concat", data)
+    np.testing.assert_array_equal(np.asarray(cat), np.arange(8.0) * 2)
+
+
+def test_health_straggler_skew():
+    from repro.core.health import HealthConfig, HealthMonitor, HealthSample
+    mon = HealthMonitor(HealthConfig())
+    mon.observe(HealthSample(step=0, step_time=1.0, loss=1.0, grad_norm=1.0,
+                             member_times=[1.0, 1.0, 1.0, 3.0]))
+    assert mon.straggler_skew() == 3.0
+    mon.observe(HealthSample(step=1, step_time=1.0, loss=float("nan"),
+                             grad_norm=1.0))
+    assert not mon.is_healthy()
+    assert any("NON-FINITE" in e for e in mon.events)

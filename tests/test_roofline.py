@@ -1,0 +1,79 @@
+"""Roofline HLO parser: exact FLOP counting through scan loops (the
+cost_analysis while-body-once correction), collective byte accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_parse import analyze, parse_module
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    x = jnp.ones((64, 32))
+    ws = jnp.ones((8, 32, 32))
+    txt = _compile_text(f, x, ws)
+    assert "known_trip_count" in txt
+    c = analyze(txt)
+    assert c.flops == 2 * 64 * 32 * 32 * 8          # trip-corrected, exact
+
+
+def test_unrolled_matches_scan():
+    def f_scan(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+        return y.sum()
+
+    def f_unroll(x, ws):
+        for i in range(4):
+            x = x @ ws[i]
+        return x.sum()
+
+    x = jnp.ones((16, 16))
+    ws = jnp.ones((4, 16, 16))
+    c1 = analyze(_compile_text(f_scan, x, ws))
+    c2 = analyze(_compile_text(f_unroll, x, ws))
+    assert c1.flops == c2.flops == 2 * 16 * 16 * 16 * 4
+
+
+def test_nested_scans_multiply():
+    def f(x, ws):
+        def outer(c, _):
+            def inner(ci, w):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, ws)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y.sum()
+
+    x = jnp.ones((8, 8))
+    ws = jnp.ones((5, 8, 8))
+    c = analyze(_compile_text(f, x, ws))
+    assert c.flops == 2 * 8 * 8 * 8 * 5 * 3
+
+
+def test_dot_general_batched_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b).sum()
+
+    a = jnp.ones((4, 8, 16))
+    b = jnp.ones((4, 16, 32))
+    c = analyze(_compile_text(f, a, b))
+    assert c.flops == 2 * 4 * 8 * 16 * 32
+
+
+def test_parse_module_finds_computations():
+    def f(x):
+        return jnp.tanh(x @ x.T).sum()
+    txt = _compile_text(f, jnp.ones((32, 32)))
+    comps = parse_module(txt)
+    assert comps and sum(len(v) for v in comps.values()) > 0
+    ndots = sum(1 for v in comps.values() for i in v if i.opcode == "dot")
+    assert ndots == txt.count(" dot(")

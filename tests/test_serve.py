@@ -1,0 +1,70 @@
+"""Serving: scheduler brokers, continuous batching engine."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models.model import build_model
+from repro.serve.scheduler import Request, Scheduler, ServeEngine
+
+
+def test_matchmaking_prefers_smallest_adequate_bucket():
+    s = Scheduler(n_slots=4, max_len=64, policy="matchmaking",
+                  bucket_lens=[16, 16, 64, 64])
+    s.submit(Request(0, np.zeros(4, np.int32), max_new_tokens=4))
+    placed = s.schedule()
+    assert placed and placed[0].slot in (0, 1)   # fits a small bucket
+    s.submit(Request(1, np.zeros(40, np.int32), max_new_tokens=8))
+    placed = s.schedule()
+    assert placed and placed[0].slot in (2, 3)   # needs a large bucket
+
+
+def test_matchmaking_fairness_round_robins_ties():
+    s = Scheduler(n_slots=4, max_len=64, policy="matchmaking",
+                  bucket_lens=[64, 64, 64, 64])
+    slots = []
+    for i in range(4):
+        s.submit(Request(i, np.zeros(2, np.int32), max_new_tokens=2))
+        slots.append(s.schedule()[0].slot)
+    assert len(set(slots)) == 4      # no slot monopolized
+
+
+def test_round_robin_cycles():
+    s = Scheduler(n_slots=3, max_len=32, policy="round_robin",
+                  bucket_lens=[32, 32, 32])
+    slots = []
+    for i in range(3):
+        s.submit(Request(i, np.zeros(2, np.int32), max_new_tokens=2))
+        slots.append(s.schedule()[0].slot)
+    assert slots == [0, 1, 2]
+
+
+def test_oversize_requests_dropped_waiting_queue_drains():
+    s = Scheduler(n_slots=1, max_len=16, policy="matchmaking",
+                  bucket_lens=[16])
+    s.submit(Request(0, np.zeros(30, np.int32), max_new_tokens=4))  # too big
+    s.submit(Request(1, np.zeros(4, np.int32), max_new_tokens=2))
+    s.submit(Request(2, np.zeros(4, np.int32), max_new_tokens=2))
+    placed = s.schedule()
+    assert s.dropped == 1 and len(placed) == 1 and len(s.queue) == 1
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "matchmaking"])
+def test_engine_completes_requests(policy):
+    cfg = reduced(get_config("smollm-360m"), n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=64)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, n_slots=2, max_len=24, policy=policy)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        engine.sched.submit(Request(
+            i, rng.integers(0, 64, size=3).astype(np.int32),
+            max_new_tokens=3))
+    out = engine.run(max_steps=64)
+    assert len(out["completed"]) == 4
+    for r in out["completed"]:
+        assert len(r.output) == 3
+        assert all(0 <= t < cfg.padded_vocab for t in r.output)

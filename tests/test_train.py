@@ -1,0 +1,111 @@
+"""Training substrate: convergence, checkpoint/restart determinism, fault
+tolerance, compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.health import HealthConfig
+from repro.data.pipeline import DataConfig, DataPipeline, synthetic_batch
+from repro.models.model import build_model
+from repro.train import checkpoint as ck
+from repro.train.compression import (compressed_grads, init_residuals)
+from repro.train.elastic_runner import run_elastic_training
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state, schedule
+from repro.train.step import init_train_state, make_train_step
+
+
+def tiny_model():
+    cfg = reduced(get_config("smollm-360m"), n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64)
+    return build_model(cfg, remat=False, xent_chunk=8), cfg
+
+
+def test_loss_decreases_on_learnable_data():
+    model, cfg = tiny_model()
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    rep = run_elastic_training(
+        model, steps=30, data_cfg=data,
+        opt_cfg=AdamWConfig(lr=1e-2, warmup_steps=3, total_steps=30),
+        health_cfg=HealthConfig(target_step_time=1e9))
+    first = np.mean(rep.losses[:5])
+    last = np.mean(rep.losses[-5:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_resume_bit_identical():
+    """train(10) == train(5) + restore + train(5) — fault-tolerance contract."""
+    model, cfg = tiny_model()
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    step_fn = jax.jit(make_train_step(model, opt))
+    pipe = DataPipeline(data, cfg)
+
+    s_a = init_train_state(model, jax.random.PRNGKey(0))
+    for i in range(10):
+        s_a, _ = step_fn(s_a, pipe.at(i))
+
+    with tempfile.TemporaryDirectory() as d:
+        s_b = init_train_state(model, jax.random.PRNGKey(0))
+        for i in range(5):
+            s_b, _ = step_fn(s_b, pipe.at(i))
+        ck.save(d, s_b, 5, data_cursor=5)
+        r = ck.restore(d, s_b)
+        s_c, cursor = r["state"], r["data_cursor"]
+        for i in range(cursor, 10):
+            s_c, _ = step_fn(s_c, pipe.at(i))
+
+    la = jax.tree_util.tree_leaves(s_a["params"])
+    lc = jax.tree_util.tree_leaves(s_c["params"])
+    for a, c in zip(la, lc):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_failure_injection_recovers():
+    model, cfg = tiny_model()
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    with tempfile.TemporaryDirectory() as d:
+        rep = run_elastic_training(
+            model, steps=25, data_cfg=data, ckpt_dir=d,
+            opt_cfg=AdamWConfig(warmup_steps=2, total_steps=25),
+            health_cfg=HealthConfig(target_step_time=1e9),
+            inject_failure_at=15)
+        assert rep.restarts == 1
+        assert rep.steps == 25
+        assert all(np.isfinite(l) for l in rep.losses)
+
+
+def test_adamw_moments_dtype():
+    params = {"w": jnp.ones((4, 4))}
+    opt = init_opt_state(params, jnp.bfloat16)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    c = AdamWConfig()
+    grads = {"w": jnp.full((4, 4), 0.1)}
+    new_p, new_opt, metrics = adamw_update(c, params, grads, opt,
+                                           jnp.int32(50))  # warmed-up lr > 0
+    assert new_opt["m"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert (np.asarray(new_p["w"]) != 1.0).all()
+
+
+def test_schedule_warmup_and_decay():
+    c = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_ratio=0.1)
+    assert float(schedule(c, jnp.int32(0))) == 0.0
+    assert abs(float(schedule(c, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(schedule(c, jnp.int32(110))) <= 0.1 + 1e-6
+
+
+def test_error_feedback_bounds_cumulative_error():
+    g = {"a": jnp.linspace(-1, 1, 512)}
+    res = init_residuals(g)
+    acc_t = jnp.zeros(512)
+    acc_c = jnp.zeros(512)
+    for _ in range(40):
+        dq, res, _ = compressed_grads(g, res)
+        acc_t += g["a"]
+        acc_c += dq["a"]
+    assert float(jnp.abs(acc_t - acc_c).max()) < 0.05
