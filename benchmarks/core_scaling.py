@@ -1,0 +1,107 @@
+"""Core DES engine scaling — wave-loop oracle vs closed-form segmented scan.
+
+Sweeps n_cloudlets up to 100k and writes ``BENCH_core.json`` (machine-
+readable old-vs-new core timings).  The wave loop is O(waves × C × V) —
+superquadratic in C — so it is only *measured* while it fits a time budget
+(``BENCH_CORE_WAVE_BUDGET_S``, default 30 s); past the budget the entry is a
+quadratic extrapolation from the last measurement, flagged
+``wave_extrapolated`` and strictly a LOWER bound (waves also grow with C),
+so the reported speedups are conservative.
+"""
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):      # standalone: python benchmarks/core_scaling.py
+    _root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.cloudsim import SimulationConfig, simulate_completion
+from repro.core.des_scan import run_simulation_batch, simulate_completion_scan
+
+BENCH_JSON = "BENCH_core.json"
+SIZES = (1_000, 5_000, 20_000, 50_000, 100_000)
+N_VMS = 512
+
+
+def _timed(fn, *args, repeats=3):
+    jax.block_until_ready(fn(*args))             # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats, out
+
+
+def bench_core(sizes=SIZES, n_vms=N_VMS, wave_budget_s=None):
+    if wave_budget_s is None:
+        wave_budget_s = float(os.environ.get("BENCH_CORE_WAVE_BUDGET_S", 30))
+    rng = np.random.default_rng(0)
+    wave = jax.jit(simulate_completion)
+    scan = jax.jit(simulate_completion_scan)
+    entries = []
+    last_wave = None                              # (C, seconds) last measured
+    for C in sizes:
+        assign = jnp.asarray(rng.integers(0, n_vms, C).astype(np.int32))
+        mi = jnp.asarray(rng.uniform(1e3, 5e4, C).astype(np.float32))
+        mips = jnp.asarray(rng.uniform(500, 2000, n_vms).astype(np.float32))
+        valid = jnp.ones(C, bool)
+
+        scan_s, (f_scan, _) = _timed(scan, assign, mi, mips, valid)
+        entry = {"n_cloudlets": C, "scan_s": scan_s}
+
+        predicted = (last_wave[1] * (C / last_wave[0]) ** 2
+                     if last_wave else 0.0)
+        if predicted <= wave_budget_s:
+            wave_s, (f_wave, _) = _timed(wave, assign, mi, mips, valid,
+                                         repeats=1)
+            last_wave = (C, wave_s)
+            rel = float(jnp.abs(f_wave - f_scan).max() /
+                        jnp.maximum(jnp.abs(f_wave).max(), 1e-30))
+            entry.update(wave_s=wave_s, wave_extrapolated=False,
+                         max_rel_diff=rel)
+        else:
+            entry.update(wave_s=predicted, wave_extrapolated=True)
+        entry["speedup"] = entry["wave_s"] / scan_s
+        entries.append(entry)
+        tag = "extrapolated-lower-bound" if entry["wave_extrapolated"] else \
+            f"relerr={entry['max_rel_diff']:.1e}"
+        emit(f"core/cl{C}/scan", scan_s * 1e6, f"speedup={entry['speedup']:.0f}x")
+        emit(f"core/cl{C}/wave", entry["wave_s"] * 1e6, tag)
+    return entries
+
+
+def bench_batch(n_scenarios=32, n_cloudlets=2_000, n_vms=128):
+    cfg = SimulationConfig(n_vms=n_vms, n_cloudlets=n_cloudlets,
+                           broker="matchmaking")
+    scales = np.linspace(0.5, 2.0, n_scenarios)
+    run_simulation_batch(cfg, np.arange(n_scenarios),
+                         mi_scale=scales)          # compile the (B,C) shape
+    r = run_simulation_batch(cfg, np.arange(n_scenarios), mi_scale=scales)
+    wall = r.timings["batch_total"]
+    emit(f"core/batch{n_scenarios}", wall * 1e6,
+         f"{n_scenarios / wall:.0f} scenarios/s")
+    return {"n_scenarios": n_scenarios, "n_cloudlets": n_cloudlets,
+            "wall_s": wall, "scenarios_per_s": n_scenarios / wall,
+            "mean_makespan": float(r.makespans.mean())}
+
+
+def main():
+    payload = {"n_vms": N_VMS, "entries": bench_core(),
+               "batch": bench_batch()}
+    return payload
+
+
+if __name__ == "__main__":
+    _path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         BENCH_JSON)
+    with open(_path, "w") as f:
+        json.dump(main(), f, indent=2)
+    print(f"wrote {_path}")

@@ -1,5 +1,7 @@
 """Figs 5.1–5.3 — scalability patterns vs #cloudlets × #members; classifies
 each curve into the thesis's §5.1.1 regimes via the speedup model."""
+import dataclasses
+
 import jax
 
 from benchmarks.common import emit, mesh_of
@@ -11,14 +13,18 @@ def main():
     n_devs = len(jax.devices())
     ns = [n for n in (1, 2, 4, 8) if n <= n_devs]
     for n_cl, iters in [(150, 0.3), (200, 1.0), (400, 2.0)]:
+        # phase 4 now runs the closed-form scan core; on >1 member it is
+        # partitioned over members too ("scan_dist"), so EVERY phase scales
         cfg = SimulationConfig(n_vms=200, n_cloudlets=n_cl,
                                broker="round_robin", is_loaded=True,
                                workload_iters_per_gmi=iters)
         times = []
         for n in ns:
-            r = run_simulation(cfg, mesh_of(n))
+            core = "scan" if n == 1 else "scan_dist"
+            r = run_simulation(dataclasses.replace(cfg, core=core), mesh_of(n))
             times.append(sum(r.timings.values()))
-            emit(f"f5.1/cl{n_cl}/n{n}", times[-1] * 1e6, "")
+            emit(f"f5.1/cl{n_cl}/n{n}", times[-1] * 1e6,
+                 f"core_sim={r.timings['core_sim'] * 1e6:.0f}us")
         diffs = [b - a for a, b in zip(times, times[1:])]
         signs = [d < 0 for d in diffs]
         regime = ("positive" if all(signs) else

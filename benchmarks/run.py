@@ -7,20 +7,34 @@ if "--one-device" not in __import__("sys").argv:
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
 
+import json
 import sys
 import traceback
 
+# make `python benchmarks/run.py` work from anywhere (repo root + src)
+_root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, _root)
+sys.path.insert(0, os.path.join(_root, "src"))
+
 
 def main() -> None:
-    from benchmarks import (fig_5_1_scaling, fig_5_4_matchmaking,
+    from benchmarks import (core_scaling, fig_5_1_scaling, fig_5_4_matchmaking,
                             fig_5_9_mapreduce, serve_brokers, speedup_model,
                             table_5_1, table_5_2_elastic)
     print("name,us_per_call,derived")
-    for mod in (table_5_1, fig_5_1_scaling, fig_5_4_matchmaking,
+    for mod in (table_5_1, core_scaling, fig_5_1_scaling, fig_5_4_matchmaking,
                 fig_5_9_mapreduce, table_5_2_elastic, speedup_model,
                 serve_brokers):
         try:
-            mod.main()
+            payload = mod.main()
+            # modules that declare a JSON artifact get it written here
+            # (core_scaling -> BENCH_core.json: old-vs-new core timings),
+            # anchored at the repo root regardless of the invoking CWD
+            if payload is not None and getattr(mod, "BENCH_JSON", None):
+                path = os.path.join(_root, mod.BENCH_JSON)
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=2)
+                print(f"# wrote {path}", flush=True)
         except Exception:
             print(f"{mod.__name__},FAILED,", flush=True)
             traceback.print_exc()

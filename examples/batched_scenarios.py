@@ -1,0 +1,64 @@
+"""Batched scenario sweeps on the closed-form DES core.
+
+    python examples/batched_scenarios.py         (8 emulated members)
+
+The segmented-scan core has no data-dependent event loop, so a whole stack
+of scenario variants — different seeds AND different workload scales —
+executes as ONE jitted vmap.  64 scenarios of 5k cloudlets on 256 VMs run
+in a single XLA dispatch; the same core also runs distributed (phase 4
+partitioned over members by VM ownership) with identical results.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.cloudsim import SimulationConfig, run_simulation
+from repro.core.des_scan import run_simulation_batch
+
+
+def main():
+    cfg = SimulationConfig(n_vms=256, n_cloudlets=5_000, broker="matchmaking")
+
+    # --- 64 scenario variants in one jit: seeds x workload-length scales
+    seeds = np.arange(64)
+    scales = np.repeat(np.linspace(0.5, 2.0, 8), 8)
+    r = run_simulation_batch(cfg, seeds, mi_scale=scales)
+    s = r.summary()
+    print(f"{r.n_scenarios} scenarios in {s['t_batch_total'] * 1e3:.1f} ms "
+          f"({1 / s['t_per_scenario']:.0f} scenarios/s after jit)")
+    print(f"makespan: min {s['min_makespan']:.0f}  "
+          f"mean {s['mean_makespan']:.0f}  max {s['max_makespan']:.0f}")
+    # heavier workloads -> longer makespans, scenario-for-scenario
+    by_scale = r.makespans.reshape(8, 8).mean(axis=1)
+    assert (np.diff(by_scale) > 0).all(), by_scale
+    print("makespan grows monotonically with workload scale:",
+          np.round(by_scale, 0))
+
+    # --- the same core, phase 4 distributed over members (identical output)
+    devs = jax.devices()
+    base = None
+    for n in (1, 8):
+        cfg_d = SimulationConfig(n_vms=256, n_cloudlets=5_000,
+                                 broker="matchmaking",
+                                 core="scan" if n == 1 else "scan_dist")
+        rr = run_simulation(cfg_d, Mesh(np.array(devs[:n]), ("data",)))
+        if base is None:
+            base = rr
+        else:
+            np.testing.assert_allclose(base.finish_times, rr.finish_times,
+                                       atol=1e-3, rtol=1e-5)
+        print(f"members={n}  makespan={rr.makespan:9.1f}  "
+              f"core_sim={rr.timings['core_sim'] * 1e3:.1f} ms "
+              f"(first call, includes jit compile)")
+    print("distributed phase 4 identical on 1 vs 8 members OK")
+
+
+if __name__ == "__main__":
+    main()

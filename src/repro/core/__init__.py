@@ -1,5 +1,6 @@
 """Cloud²Sim core: the paper's contribution as composable JAX modules.
 
+  compat       version-tolerant jax shims (shard_map location / kwarg renames)
   partition    PartitionUtil + 271-virtual-shard consistent partition table
   grid         DataGrid — the in-memory data grid over a device mesh
   executor     DistributedExecutor — logic-to-data shard_map execution
@@ -9,4 +10,7 @@
   coordinator  multi-tenant Coordinator
   speedup      analytical model, Eqs (3.1)-(3.11)
   cloudsim     the distributed DES cloud simulator (RR + matchmaking brokers)
+  des_scan     closed-form O(C log C) segmented-scan DES core (+ distributed
+               phase-4 and batched scenario sweeps)
 """
+from repro.core.compat import shard_map  # noqa: F401  (re-export the shim)

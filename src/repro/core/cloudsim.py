@@ -14,11 +14,18 @@ Execution phases, mirroring §3.4.1.2 / Fig 3.10:
   2. schedule (broker)        (distributed: matchmaking over local partitions,
                                VM table replicated — executeOnKeyOwner)
   3. cloudlet workloads       (distributed: the ``isLoaded`` real compute)
-  4. core event simulation    (master-only: time-shared completion waves —
-                               "tightly coupled core fragments are not
-                               distributed", §4 summary)
-Outputs are bit-identical regardless of the number of members (tests assert
-the thesis's accuracy claim).
+  4. core event simulation    (distributed: the closed-form segmented-scan
+                               core in ``des_scan`` partitions independent
+                               per-VM completion segments over members —
+                               the thesis left this phase master-only
+                               because "tightly coupled core fragments are
+                               not distributed", §4; the closed form
+                               decouples them)
+``SimulationConfig.core`` selects the phase-4 engine: "scan" (default,
+O(C log C) closed form), "scan_dist" (scan partitioned over members),
+"wave" (the original master-only event loop — kept as the equivalence
+oracle).  Outputs are identical regardless of the number of members (tests
+assert the thesis's accuracy claim).
 """
 from __future__ import annotations
 
@@ -34,6 +41,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.executor import DistributedExecutor
 from repro.core.grid import DataGrid
 from repro.core.partition import pad_to_shards
+from repro.core import des_scan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +53,8 @@ class SimulationConfig:
     vm_mips_range: tuple = (500.0, 2000.0)
     cloudlet_mi_range: tuple = (1000.0, 50000.0)   # million instructions
     broker: str = "round_robin"                    # | "matchmaking"
+    core: str = "scan"                             # | "scan_dist" | "wave"
+    use_kernel: bool = False                       # Pallas seg-scan kernel
     is_loaded: bool = False                        # attach a real workload
     workload_dim: int = 64                         # loaded-matmul size
     workload_iters_per_gmi: float = 2.0            # iterations per 1000 MI
@@ -163,6 +173,9 @@ def simulate_completion(vm_assign, cloudlet_mi, vm_mips, valid):
     Event loop: between consecutive completions every active cloudlet on VM v
     progresses at mips_v / active_v.  Returns (finish_times, makespan).
     Pure JAX while_loop — one iteration per completion wave.
+
+    O(waves × C × V): kept as the equivalence ORACLE for the O(C log C)
+    closed-form core in ``repro.core.des_scan`` (the production path).
     """
     C = cloudlet_mi.shape[0]
     V = vm_mips.shape[0]
@@ -195,6 +208,9 @@ def simulate_completion(vm_assign, cloudlet_mi, vm_mips, valid):
     _, finish, makespan = jax.lax.while_loop(
         cond, body, (remaining, finish, jnp.float32(0.0)))
     return finish, makespan
+
+
+_simulate_completion_jit = jax.jit(simulate_completion)
 
 
 # ----------------------------------------------------------------- full run
@@ -237,9 +253,18 @@ def run_simulation(cfg: SimulationConfig, mesh: Mesh,
         timings["workload"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    finish, makespan = jax.jit(simulate_completion)(
-        assign, grid.get("cloudlet_mi"), grid.get("vm_mips"),
-        grid.get("cloudlet_valid"))
+    core_args = (assign, grid.get("cloudlet_mi"), grid.get("vm_mips"),
+                 grid.get("cloudlet_valid"))
+    if cfg.core == "wave":
+        finish, makespan = _simulate_completion_jit(*core_args)
+    elif cfg.core == "scan_dist":
+        finish, makespan = des_scan.simulate_completion_distributed(
+            *core_args, executor)
+    elif cfg.core == "scan":
+        finish, makespan = des_scan.simulate_completion_scan_jit(
+            *core_args, use_kernel=cfg.use_kernel)
+    else:
+        raise ValueError(f"unknown core {cfg.core!r}")
     jax.block_until_ready(finish)
     timings["core_sim"] = time.perf_counter() - t0
 

@@ -1,0 +1,59 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets the jax 0.4.x series shipped in the image but is written
+against the newer spellings; this module papers over both directions:
+
+  * ``shard_map``      — top-level ``jax.shard_map`` only exists from
+                         jax >= 0.6; before that it lives in
+                         ``jax.experimental.shard_map``.  The replication
+                         check kwarg was also renamed
+                         (``check_rep`` -> ``check_vma``); the wrapper
+                         accepts either and translates.
+  * ``make_mesh``      — the ``axis_types`` kwarg (and
+                         ``jax.sharding.AxisType``) only exist on newer jax;
+                         the wrapper drops the kwarg where unsupported
+                         (``Auto`` is the default there anyway).
+  * ``CompilerParams`` — pallas-TPU renamed ``TPUCompilerParams`` to
+                         ``CompilerParams``; this resolves whichever the
+                         installed jax ships.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                     # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                      # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *args, **kwargs):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename hidden."""
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, *args, **kwargs)
+
+
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(jax.make_mesh).parameters)
+
+# jax.sharding.AxisType.Auto where it exists, else None (the kwarg is dropped).
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` tolerating the ``axis_types`` kwarg's absence."""
+    if "axis_types" not in _MAKE_MESH_PARAMS:
+        kwargs.pop("axis_types", None)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+from jax.experimental.pallas import tpu as _pltpu  # noqa: E402
+
+CompilerParams = (getattr(_pltpu, "CompilerParams", None)
+                  or _pltpu.TPUCompilerParams)

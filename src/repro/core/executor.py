@@ -14,7 +14,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.core.compat import shard_map
 
 
 class DistributedExecutor:

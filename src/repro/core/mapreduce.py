@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.core.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,3 +1,6 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+#   seg_scan  — chunked segmented prefix-sum: the hot loop of the
+#               closed-form DES completion core (core/des_scan.py)

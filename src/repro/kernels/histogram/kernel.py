@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import CompilerParams
+
 
 def _hist_kernel(t_ref, o_ref, acc_ref, *, block_v: int, n_t_blocks: int):
     ti = pl.program_id(1)
@@ -50,7 +52,7 @@ def histogram_kernel(tokens, vocab: int, *, block_t: int = 256,
         out_specs=pl.BlockSpec((block_v,), lambda v, t: (v,)),
         out_shape=jax.ShapeDtypeStruct((vocab,), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_v,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(tokens)

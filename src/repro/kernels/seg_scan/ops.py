@@ -1,0 +1,16 @@
+"""Jitted wrapper for the segmented-cumsum kernel (interpret off-TPU)."""
+import functools
+
+import jax
+
+from repro.kernels.seg_scan.kernel import seg_cumsum
+from repro.kernels.seg_scan.ref import seg_cumsum_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def segmented_cumsum(term, reset, *, chunk: int = 128):
+    return seg_cumsum(term, reset, chunk=chunk, interpret=not _on_tpu())

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: segmented inclusive cumsum via global cumsum re-basing."""
+import jax
+import jax.numpy as jnp
+
+
+def seg_cumsum_ref(term, reset):
+    """term: (C,) f32; reset: (C,) nonzero at segment starts -> (C,) f32.
+
+    cumsum over everything, then subtract the running total just before each
+    element's segment start (found with a cummax over start positions).
+    """
+    term = term.astype(jnp.float32)
+    C = term.shape[0]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    start_pos = jax.lax.cummax(jnp.where(reset > 0, idx, 0))
+    cs = jnp.cumsum(term)
+    base = cs[start_pos] - term[start_pos]
+    return cs - base

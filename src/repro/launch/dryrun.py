@@ -126,6 +126,8 @@ def run_cell(arch, shape_name, mesh, mesh_name, out_dir=None, save_hlo=True,
     t2 = time.time()
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     colls = {k: txt.count(k + "(") + txt.count(k + "-start(")
              for k in ("all-reduce", "all-gather", "reduce-scatter",
@@ -167,8 +169,9 @@ def pp_smoke(out_dir=None):
     pipelined over mesh (4,8,16) = ("pipe","data","model") — 512 chips."""
     import jax.numpy as _jnp
     from repro.train.pipeline import pipelined_apply
-    mesh = jax.make_mesh((4, 8, 16), ("pipe", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.core.compat import AXIS_TYPE_AUTO, make_mesh
+    mesh = make_mesh((4, 8, 16), ("pipe", "data", "model"),
+                     axis_types=(AXIS_TYPE_AUTO,) * 3)
     L, B, S, D, F = 32, 64, 4096, 4096, 14336
 
     def layer_fn(p, h):

@@ -25,8 +25,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.models.moe import matchmaking_route
 from repro.models.shard_ctx import current_rules

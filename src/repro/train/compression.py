@@ -18,8 +18,9 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 
 # ----------------------------------------------------- int8 error feedback

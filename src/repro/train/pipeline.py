@@ -19,8 +19,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 
 def pipelined_apply(layer_fn: Callable, stacked_params, x, mesh: Mesh, *,

@@ -15,6 +15,8 @@ from repro.kernels.histogram.kernel import histogram_kernel
 from repro.kernels.histogram.ref import histogram_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.seg_scan.kernel import seg_cumsum
+from repro.kernels.seg_scan.ref import seg_cumsum_ref
 
 
 @pytest.mark.parametrize("BH,Sq,Skv,hd,causal,window,bq,bk", [
@@ -149,3 +151,20 @@ def test_gmm_pallas_backward():
     for a, b in zip(gk, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("C,chunk,p_reset", [
+    (128, 128, 0.1),
+    (300, 64, 0.25),
+    (1000, 128, 0.02),
+    (17, 128, 0.5),
+])
+def test_seg_cumsum_sweep(C, chunk, p_reset):
+    """Chunked segmented cumsum (DES scan core) vs the jnp rebase oracle."""
+    rng = np.random.default_rng(C)
+    term = jnp.asarray(rng.uniform(0, 5, C).astype(np.float32))
+    reset = jnp.asarray((rng.uniform(size=C) < p_reset).astype(np.float32))
+    out = seg_cumsum(term, reset, chunk=chunk, interpret=True)
+    ref = seg_cumsum_ref(term, reset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-5)
