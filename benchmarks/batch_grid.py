@@ -1,0 +1,74 @@
+"""Multi-axis scenario-grid throughput — scenarios/s at B ∈ {32, 128, 512}.
+
+The grid stacks seeds × mi_scale × broker × VM-count × MIPS-distribution
+variants (heterogeneous shapes padded: 0-MIPS VMs, valid=False cloudlets)
+into ONE jitted vmap, and optionally shards the batch across mesh members.
+Writes ``BENCH_batch.json``: per-B wall time, scenarios/s, and the
+single-member vs mesh-sharded split — the CloudSim-scale scenario
+throughput a sequential simulator can't reach (arXiv:0903.2525).
+"""
+import json
+import os
+import sys
+
+if __package__ in (None, ""):      # standalone: python benchmarks/batch_grid.py
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    _root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import emit
+from repro.core.cloudsim import SimulationConfig
+from repro.core.des_scan import make_scenario_grid, run_scenario_grid
+from repro.core.executor import DistributedExecutor
+
+BENCH_JSON = "BENCH_batch.json"
+BATCH_SIZES = (32, 128, 512)
+N_CLOUDLETS = 2_000
+N_VMS = 128
+
+
+def bench_grid(B: int, executor=None):
+    """B mixed-axis variants (2 brokers × 2 VM-counts × 3 MIPS-dists ×
+    2 scales × seeds-to-fill, truncated to exactly B) through one jit."""
+    cfg = SimulationConfig(n_vms=N_VMS, n_cloudlets=N_CLOUDLETS)
+    grid = make_scenario_grid(
+        seeds=range(max(1, -(-B // 24))), mi_scales=[0.75, 1.5],
+        brokers=["round_robin", "matchmaking"],
+        vm_counts=[N_VMS // 2, N_VMS],
+        mips_dists=["uniform", "fixed", "bimodal"])
+    grid = {k: np.asarray(v)[:B] for k, v in grid.items()}
+    assert len(grid["seeds"]) == B
+    run_scenario_grid(cfg, grid, executor=executor)     # compile the shape
+    r = run_scenario_grid(cfg, grid, executor=executor)
+    wall = r.timings["batch_total"]
+    mode = f"mesh{executor.n_members}" if executor is not None else "1member"
+    emit(f"grid/B{B}/{mode}", wall * 1e6, f"{B / wall:.0f} scenarios/s")
+    return {"n_scenarios": B, "n_cloudlets": N_CLOUDLETS, "n_vms": N_VMS,
+            "mode": mode, "wall_s": wall, "scenarios_per_s": B / wall,
+            "mean_makespan": float(r.makespans.mean()),
+            "axes": {"brokers": 2, "vm_counts": 2, "mips_dists": 3,
+                     "mi_scales": 2}}
+
+
+def main():
+    entries = [bench_grid(B) for B in BATCH_SIZES]
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        ex = DistributedExecutor(Mesh(np.array(jax.devices()), ("data",)))
+        entries += [bench_grid(B, executor=ex) for B in BATCH_SIZES]
+    return {"batch_sizes": list(BATCH_SIZES), "n_devices": n_dev,
+            "entries": entries}
+
+
+if __name__ == "__main__":
+    _path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         BENCH_JSON)
+    with open(_path, "w") as f:
+        json.dump(main(), f, indent=2)
+    print(f"wrote {_path}")

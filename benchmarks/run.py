@@ -18,13 +18,14 @@ sys.path.insert(0, os.path.join(_root, "src"))
 
 
 def main() -> None:
-    from benchmarks import (core_scaling, fig_5_1_scaling, fig_5_4_matchmaking,
-                            fig_5_9_mapreduce, serve_brokers, speedup_model,
-                            table_5_1, table_5_2_elastic)
+    from benchmarks import (batch_grid, core_scaling, fig_5_1_scaling,
+                            fig_5_4_matchmaking, fig_5_9_mapreduce,
+                            serve_brokers, speedup_model, table_5_1,
+                            table_5_2_elastic)
     print("name,us_per_call,derived")
-    for mod in (table_5_1, core_scaling, fig_5_1_scaling, fig_5_4_matchmaking,
-                fig_5_9_mapreduce, table_5_2_elastic, speedup_model,
-                serve_brokers):
+    for mod in (table_5_1, core_scaling, batch_grid, fig_5_1_scaling,
+                fig_5_4_matchmaking, fig_5_9_mapreduce, table_5_2_elastic,
+                speedup_model, serve_brokers):
         try:
             payload = mod.main()
             # modules that declare a JSON artifact get it written here

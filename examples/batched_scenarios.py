@@ -3,10 +3,12 @@
     python examples/batched_scenarios.py         (8 emulated members)
 
 The segmented-scan core has no data-dependent event loop, so a whole stack
-of scenario variants — different seeds AND different workload scales —
-executes as ONE jitted vmap.  64 scenarios of 5k cloudlets on 256 VMs run
-in a single XLA dispatch; the same core also runs distributed (phase 4
-partitioned over members by VM ownership) with identical results.
+of scenario variants executes as ONE jitted vmap — and not just seeds ×
+workload scales: the scenario GRID spans broker, VM-count, and
+MIPS-distribution axes, with heterogeneous shapes padded (0-MIPS VMs,
+valid=False cloudlets) so mixed variants stack.  The same grid also shards
+across mesh members (the scenario vmap inside the partitioned member_fn)
+with bit-identical results.
 """
 import os
 
@@ -20,7 +22,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.cloudsim import SimulationConfig, run_simulation
-from repro.core.des_scan import run_simulation_batch
+from repro.core.des_scan import (make_scenario_grid, run_scenario_grid,
+                                 run_simulation_batch)
+from repro.core.executor import DistributedExecutor
 
 
 def main():
@@ -41,6 +45,34 @@ def main():
     print("makespan grows monotonically with workload scale:",
           np.round(by_scale, 0))
 
+    # --- the MULTI-AXIS grid: 2 brokers x 2 VM-counts x 3 MIPS-dists x
+    #     2 scales x 4 seeds = 96 mixed-shape variants, one jit
+    grid = make_scenario_grid(seeds=range(4), mi_scales=[0.75, 1.5],
+                              brokers=["round_robin", "matchmaking"],
+                              vm_counts=[128, 256],
+                              mips_dists=["uniform", "fixed", "bimodal"])
+    g = run_scenario_grid(cfg, grid)
+    print(f"\n{g.n_scenarios}-variant multi-axis grid in "
+          f"{g.timings['batch_total'] * 1e3:.1f} ms "
+          f"({g.n_scenarios / g.timings['batch_total']:.0f} scenarios/s)")
+    # padded rows are exactly 0; per-axis means show the axes matter
+    for b in range(g.n_scenarios):
+        assert (g.finish_times[b, int(g.n_cloudlets[b]):] == 0).all()
+    for name, ids in (("broker", g.broker), ("mips_dist", g.mips_dist),
+                      ("n_vms", g.n_vms)):
+        means = {int(v): float(g.makespans[ids == v].mean())
+                 for v in np.unique(ids)}
+        print(f"  mean makespan by {name}: "
+              + "  ".join(f"{k}:{v:.0f}" for k, v in means.items()))
+
+    # --- the same grid sharded across 8 members: bit-identical, one
+    #     member_fn dispatch with the scenario vmap inside
+    ex = DistributedExecutor(Mesh(np.array(jax.devices()), ("data",)))
+    gd = run_scenario_grid(cfg, grid, executor=ex)
+    assert np.array_equal(g.finish_times, gd.finish_times)
+    print(f"grid sharded over {ex.n_members} members: bit-identical, "
+          f"{gd.n_scenarios / gd.timings['batch_total']:.0f} scenarios/s")
+
     # --- the same core, phase 4 distributed over members (identical output)
     devs = jax.devices()
     base = None
@@ -52,12 +84,11 @@ def main():
         if base is None:
             base = rr
         else:
-            np.testing.assert_allclose(base.finish_times, rr.finish_times,
-                                       atol=1e-3, rtol=1e-5)
+            assert np.array_equal(base.finish_times, rr.finish_times)
         print(f"members={n}  makespan={rr.makespan:9.1f}  "
               f"core_sim={rr.timings['core_sim'] * 1e3:.1f} ms "
               f"(first call, includes jit compile)")
-    print("distributed phase 4 identical on 1 vs 8 members OK")
+    print("distributed phase 4 bit-identical on 1 vs 8 members OK")
 
 
 if __name__ == "__main__":

@@ -104,11 +104,23 @@ def matchmaking_assign(local_ids, local_mi, vm_mips, n_vms: int):
     mips >= required; bind to the (id mod n_candidates)-th smallest adequate
     VM — best-fit with round-robin fairness (no overloading the largest VMs).
     """
-    mips_valid = vm_mips[:n_vms]
-    order = jnp.argsort(mips_valid)                      # ascending by size
-    sorted_mips = mips_valid[order]
+    return matchmaking_assign_masked(local_ids, local_mi, vm_mips[:n_vms],
+                                     jnp.ones((n_vms,), bool))
+
+
+def matchmaking_assign_masked(local_ids, local_mi, vm_mips, vm_valid):
+    """``matchmaking_assign`` with the VM count TRACED: padded VMs are masked
+    by ``vm_valid`` instead of sliced off, so scenario-grid variants with
+    heterogeneous VM counts batch into one vmap.  Equals the static version
+    exactly when every VM is valid (padded VMs sort to +inf, past every
+    candidate window)."""
+    n_vms = vm_valid.sum().astype(jnp.int32)
+    keyed = jnp.where(vm_valid, vm_mips, jnp.inf)
+    order = jnp.argsort(keyed)                           # valid ascending first
+    sorted_mips = keyed[order]
     max_mi = 50000.0
-    required = local_mi / max_mi * (sorted_mips[-1] * 0.9)
+    max_mips = jnp.max(jnp.where(vm_valid, vm_mips, -jnp.inf))
+    required = local_mi / max_mi * (max_mips * 0.9)
     first_ok = jnp.searchsorted(sorted_mips, required)   # (c,)
     first_ok = jnp.minimum(first_ok, n_vms - 1)
     n_cand = n_vms - first_ok
@@ -176,12 +188,20 @@ def simulate_completion(vm_assign, cloudlet_mi, vm_mips, valid):
 
     O(waves × C × V): kept as the equivalence ORACLE for the O(C log C)
     closed-form core in ``repro.core.des_scan`` (the production path).
+
+    Dtype-generic: the arithmetic runs in the dtype of ``cloudlet_mi``, so
+    under ``jax.experimental.enable_x64`` the oracle accumulates ``now`` in
+    f64 and the equivalence tolerance measures only the scan's own f32
+    error, not the oracle's sequential drift (~eps·|t|·√waves in f32).
     """
     C = cloudlet_mi.shape[0]
     V = vm_mips.shape[0]
-    remaining = jnp.where(valid, cloudlet_mi, 0.0)
-    finish = jnp.zeros((C,), jnp.float32)
-    onehot_vm = jax.nn.one_hot(vm_assign, V, dtype=jnp.float32)
+    dtype = cloudlet_mi.dtype if jnp.issubdtype(cloudlet_mi.dtype,
+                                                jnp.floating) else jnp.float32
+    remaining = jnp.where(valid, cloudlet_mi, 0.0).astype(dtype)
+    vm_mips = vm_mips.astype(dtype)
+    finish = jnp.zeros((C,), dtype)
+    onehot_vm = jax.nn.one_hot(vm_assign, V, dtype=dtype)
 
     def cond(state):
         remaining, _, _ = state
@@ -190,7 +210,7 @@ def simulate_completion(vm_assign, cloudlet_mi, vm_mips, valid):
     def body(state):
         remaining, finish, now = state
         active = remaining > 1e-6
-        counts = (active.astype(jnp.float32))[None, :] @ onehot_vm  # (1,V)
+        counts = (active.astype(dtype))[None, :] @ onehot_vm  # (1,V)
         counts = counts[0]
         rate_vm = jnp.where(counts > 0, vm_mips / jnp.maximum(counts, 1.0), 0.0)
         rate = (onehot_vm @ rate_vm) * active                        # (C,)
@@ -206,7 +226,7 @@ def simulate_completion(vm_assign, cloudlet_mi, vm_mips, valid):
         return new_remaining, finish, now + dt
 
     _, finish, makespan = jax.lax.while_loop(
-        cond, body, (remaining, finish, jnp.float32(0.0)))
+        cond, body, (remaining, finish, jnp.zeros((), dtype)))
     return finish, makespan
 
 
@@ -230,9 +250,17 @@ class SimulationResult:
 
 
 def run_simulation(cfg: SimulationConfig, mesh: Mesh,
-                   backup_count: int = 0) -> SimulationResult:
-    grid = DataGrid(mesh, backup_count=backup_count)
-    executor = DistributedExecutor(mesh)
+                   backup_count: int = 0, *, grid: Optional[DataGrid] = None,
+                   executor: Optional[DistributedExecutor] = None,
+                   vm_owner=None) -> SimulationResult:
+    """One full simulation on ``mesh``.  ``grid``/``executor`` may be
+    supplied by an elastic cluster that re-homes them across scale events
+    (caller-owned grids are NOT cleared at the end); ``vm_owner`` is the
+    PartitionTable-backed VM→member map for ``core="scan_dist"``."""
+    own_grid = grid is None
+    grid = grid if grid is not None else DataGrid(mesh,
+                                                 backup_count=backup_count)
+    executor = executor if executor is not None else DistributedExecutor(mesh)
     timings = {}
 
     t0 = time.perf_counter()
@@ -259,7 +287,7 @@ def run_simulation(cfg: SimulationConfig, mesh: Mesh,
         finish, makespan = _simulate_completion_jit(*core_args)
     elif cfg.core == "scan_dist":
         finish, makespan = des_scan.simulate_completion_distributed(
-            *core_args, executor)
+            *core_args, executor, vm_owner=vm_owner)
     elif cfg.core == "scan":
         finish, makespan = des_scan.simulate_completion_scan_jit(
             *core_args, use_kernel=cfg.use_kernel)
@@ -268,9 +296,103 @@ def run_simulation(cfg: SimulationConfig, mesh: Mesh,
     jax.block_until_ready(finish)
     timings["core_sim"] = time.perf_counter() - t0
 
-    grid.clear()   # clearDistributedObjects()
+    if own_grid:
+        grid.clear()   # clearDistributedObjects()
     return SimulationResult(
         vm_assign=np.asarray(assign), finish_times=np.asarray(finish),
         makespan=float(makespan),
         workload_checksum=None if checks is None else np.asarray(checks),
         timings=timings)
+
+
+# ------------------------------------------------- elastic simulation cluster
+
+class ElasticSimulationCluster:
+    """Elastic mesh for ``core="scan_dist"``: the IntelligentAdaptiveScaler
+    grows/shrinks the member set MID-RUN and the simulation keeps going.
+
+    Wiring (PAPER §4.1.3 / §4.3 on a device mesh): VM ownership lives in a
+    271-virtual-partition ``PartitionTable``; the ``ElasticController``'s
+    remesh callback (one atomic decision, process-0 style) rebalances the
+    table to the new member count — re-homing only the moved virtual
+    partitions — retires exactly the OLD mesh's compiled distributed cores
+    (``des_scan.invalidate_dist_core``), rebuilds the mesh over the device
+    pool, and re-homes any persistent ``DataGrid`` entries.  The next
+    ``simulate()`` call runs on the new member count; because ownership is a
+    runtime operand of the distributed core and per-member partials are
+    disjoint, finish vectors are BIT-identical before and after any scale
+    event.
+    """
+
+    def __init__(self, devices=None, axis: str = "data",
+                 health_cfg: Optional["HealthConfig"] = None,
+                 start_members: int = 1,
+                 partition_count: Optional[int] = None):
+        from repro.core.elastic import ElasticController
+        from repro.core.health import HealthConfig
+        from repro.core.partition import (DEFAULT_PARTITION_COUNT,
+                                          PartitionTable)
+
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.axis = axis
+        n0 = max(1, min(start_members, len(self.devices)))
+        self.table = PartitionTable(
+            partition_count=partition_count or DEFAULT_PARTITION_COUNT,
+            n_instances=n0)
+        hc = health_cfg or HealthConfig()
+        hc = dataclasses.replace(
+            hc, max_instances=min(hc.max_instances, len(self.devices)))
+        self.controller = ElasticController(hc, n0, remesh_fn=self._remesh)
+        self.grid: Optional[DataGrid] = None
+        self.scale_events = []
+        self._build(n0)
+
+    # ------------------------------------------------------------- topology
+    def _build(self, n: int) -> None:
+        self.executor = DistributedExecutor.for_devices(self.devices[:n],
+                                                        self.axis)
+        self.mesh = self.executor.mesh
+
+    @property
+    def n_members(self) -> int:
+        return self.controller.n_instances
+
+    def vm_owner(self, n_vms: int) -> jnp.ndarray:
+        """Current VM→member map (the runtime operand of the scan core)."""
+        return jnp.asarray(self.table.owners_of_range(n_vms))
+
+    def _remesh(self, n: int) -> None:
+        old_mesh = self.mesh
+        moved = self.table.rebalance(n)
+        retired = des_scan.invalidate_dist_core(old_mesh, self.axis)
+        self._build(n)
+        if self.grid is not None:
+            self.grid.remesh(self.mesh)
+        self.scale_events.append(
+            {"n_members": n, "moved_partitions": moved,
+             "retired_cores": retired})
+
+    # ------------------------------------------------------------- scaling
+    def observe_load(self, load: float):
+        """Feed one load sample (observed/target, the paper's process-CPU
+        analogue) to the monitor→probe→IAS chain; a threshold crossing
+        triggers the remesh callback at this step boundary."""
+        return self.controller.tick(load)
+
+    # ----------------------------------------------------------- simulation
+    def simulate(self, cfg: SimulationConfig) -> SimulationResult:
+        """Run one simulation on the CURRENT member count with table-backed
+        VM ownership.  ``create_entities`` pads entity sizes to the current
+        member count, so the VM→member map is built at that same padded
+        length.  For finish vectors to stay bit-identical ACROSS scale
+        events, pick cfg sizes divisible by every member count the IAS may
+        reach (otherwise the padded shapes — and hence the PRNG draws —
+        differ between member counts)."""
+        if cfg.core != "scan_dist":
+            cfg = dataclasses.replace(cfg, core="scan_dist")
+        if self.grid is None:
+            self.grid = DataGrid(self.mesh)
+        V = pad_to_shards(cfg.n_vms, self.n_members)
+        return run_simulation(cfg, self.mesh, grid=self.grid,
+                              executor=self.executor,
+                              vm_owner=self.vm_owner(V))

@@ -18,22 +18,34 @@ active sharers, and run ONE segmented prefix scan.  O(C log C) total, no
 while_loop, no (C,V) one-hot, trivially vmappable (batched sweeps) and
 partitionable by VM ownership (distributed phase 4).
 
-Three execution paths:
+Execution paths:
   * ``simulate_completion_scan``        — pure-jnp sort + segmented cumsum
   * ``use_kernel=True``                 — the Pallas chunked segmented-scan
                                           kernel (``kernels/seg_scan``),
                                           interpret-mode fallback off-TPU
-  * ``simulate_completion_distributed`` — per-VM segments partitioned over
-                                          mesh members via
-                                          ``DistributedExecutor.execute_on_key_owners``
-plus ``run_simulation_batch`` — one jit over ≥32 stacked scenario variants.
+  * ``simulate_completion_distributed`` — per-VM result segments owned by
+                                          mesh members via a *runtime*
+                                          ``PartitionTable``-backed VM→member
+                                          map (elastic: rebalancing the table
+                                          never recompiles; a scale event
+                                          only retires the old mesh's
+                                          executable via
+                                          ``invalidate_dist_core``)
+  * ``run_simulation_batch``            — one jit over a multi-axis scenario
+                                          GRID (seeds × mi_scale × broker ×
+                                          VM-count × MIPS-distribution),
+                                          heterogeneous shapes padded so all
+                                          variants stack; optionally sharded
+                                          across mesh members (vmap of the
+                                          scenario fn inside the partitioned
+                                          member_fn).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -125,56 +137,112 @@ simulate_completion_scan_jit = jax.jit(
 
 # ------------------------------------------------- distributed phase 4
 
-@functools.lru_cache(maxsize=32)
+def default_vm_owner(n_vms: int, n_members: int) -> jnp.ndarray:
+    """VM→member map from a freshly-balanced ``PartitionTable`` — the
+    ownership an elastic cluster starts from before any scale event."""
+    from repro.core.partition import PartitionTable
+    table = PartitionTable(n_instances=n_members)
+    return jnp.asarray(table.owners_of_range(n_vms))
+
+
+# Compiled distributed cores, keyed on (mesh, axis, V).  A plain dict (not
+# lru_cache) so a scale event can retire exactly the executables built for
+# the mesh it replaces while every other member count's core stays warm;
+# FIFO-bounded so non-elastic sweeps over many (mesh, V) combinations don't
+# accumulate executables forever.
+_DIST_CORE_CACHE: Dict[tuple, object] = {}
+_DIST_CORE_CACHE_MAX = 32
+
+
+def invalidate_dist_core(mesh=None, axis: Optional[str] = None) -> int:
+    """Drop compiled distributed cores.  With a mesh (and optionally an
+    axis), only that mesh's executables are invalidated — the elastic
+    controller calls this on SCALE_OUT/IN so the retired member count's
+    cores are freed but all other cached cores survive the event.  With no
+    arguments, clears everything.  Returns the number of entries dropped."""
+    keys = [k for k in _DIST_CORE_CACHE
+            if (mesh is None or k[0] == mesh) and (axis is None or k[1] == axis)]
+    for k in keys:
+        del _DIST_CORE_CACHE[k]
+    return len(keys)
+
+
 def _dist_core(mesh, axis, V):
-    """Compiled distributed phase-4 core for one (mesh, VM-count); cached so
-    every simulation on the same mesh reuses the executable."""
+    """Compiled distributed phase-4 core for one (mesh, VM-count).  The
+    VM→member ownership map is a RUNTIME operand, so rebalancing the
+    partition table re-homes VMs without touching the executable."""
+    key = (mesh, axis, V)
+    cached = _DIST_CORE_CACHE.get(key)
+    if cached is not None:
+        return cached
+
     from repro.core.executor import DistributedExecutor
 
     executor = DistributedExecutor(mesh, axis)
-    n = executor.n_members
-    shard = -(-V // n)                               # ceil(V / n) ranges
-    members = jnp.arange(n, dtype=jnp.int32)
+    members = jnp.arange(executor.n_members, dtype=jnp.int32)
 
-    def member_fn(mid, assign, mi, mips, val):
-        lo = mid[0] * shard
-        hi = jnp.minimum(lo + shard, V)
-        mine = (assign >= lo) & (assign < hi)
-        f, _ = simulate_completion_scan(assign, mi, mips, val & mine)
-        return f[None, :]                            # (1, C) partial
+    def member_fn(mid, owner, assign, mi, mips, val):
+        # Every member runs the IDENTICAL full scan (the O(C log C) sort is
+        # replicated anyway — see ROADMAP's distributed-sample-sort item) and
+        # keeps only the finish entries of the VMs it owns.  Masking the
+        # *output* rather than the validity keeps each element's value
+        # bit-identical to the single-member scan for ANY ownership map and
+        # member count: the partials are disjoint, and x + 0.0 == x exactly.
+        f, _ = simulate_completion_scan(assign, mi, mips, val)
+        mine = owner[assign] == mid[0]
+        return jnp.where(mine, f, 0.0)[None, :]     # (1, C) partial
 
-    def call(vm_assign, cloudlet_mi, vm_mips, valid):
+    def call(vm_owner, vm_assign, cloudlet_mi, vm_mips, valid):
         parts = executor.execute_on_key_owners(
             member_fn, members,
-            replicated_args=(vm_assign, cloudlet_mi, vm_mips, valid),
+            replicated_args=(vm_owner, vm_assign, cloudlet_mi, vm_mips,
+                             valid),
             out_specs=P(axis, None))
         finish = parts.sum(axis=0)
         return finish, jnp.max(finish, initial=0.0)
 
-    return jax.jit(call)
+    fn = jax.jit(call)
+    while len(_DIST_CORE_CACHE) >= _DIST_CORE_CACHE_MAX:
+        del _DIST_CORE_CACHE[next(iter(_DIST_CORE_CACHE))]
+    _DIST_CORE_CACHE[key] = fn
+    return fn
 
 
 def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
-                                    executor):
-    """Phase 4, distributed for the first time: per-VM completion segments
-    are independent, so VM ownership is partitioned over mesh members
-    (ceil-ranges, the PartitionUtil convention) and each member scans only
-    the cloudlets bound to its VMs via ``execute_on_key_owners``.  The
-    per-member partials are disjoint; their sum is the full finish vector —
-    bit-identical for any member count (the thesis's accuracy claim)."""
-    fn = _dist_core(executor.mesh, executor.axis, vm_mips.shape[0])
-    return fn(vm_assign, cloudlet_mi, vm_mips, valid)
+                                    executor, vm_owner=None):
+    """Phase 4 distributed: per-VM completion segments are independent, so
+    each member owns the finish entries of its VMs — ownership given by a
+    ``PartitionTable``-backed VM→member map (``vm_owner``, a (V,) int32
+    runtime array; defaults to a freshly-balanced table).  The per-member
+    partials are disjoint and their sum is the full finish vector —
+    BIT-identical to ``simulate_completion_scan`` for any member count and
+    any ownership map (the thesis's accuracy claim), so an IAS scale event
+    mid-run cannot perturb results."""
+    V = vm_mips.shape[0]
+    if vm_owner is None:
+        vm_owner = default_vm_owner(V, executor.n_members)
+    fn = _dist_core(executor.mesh, executor.axis, V)
+    return fn(jnp.asarray(vm_owner, jnp.int32), vm_assign, cloudlet_mi,
+              vm_mips, valid)
 
 
 # ------------------------------------------------- batched scenario sweeps
 
+BROKER_IDS = {"round_robin": 0, "matchmaking": 1}
+MIPS_DIST_IDS = {"uniform": 0, "fixed": 1, "bimodal": 2}
+
+
 @dataclasses.dataclass
 class BatchSimulationResult:
-    """One jit, B scenario variants (stacked seeds × length scales)."""
+    """One jit, B scenario variants (a multi-axis grid)."""
     vm_assign: np.ndarray        # (B, C)
     finish_times: np.ndarray     # (B, C)
     makespans: np.ndarray        # (B,)
     timings: Dict[str, float]
+    broker: Optional[np.ndarray] = None      # (B,) broker id per variant
+    n_vms: Optional[np.ndarray] = None       # (B,) live VMs per variant
+    n_cloudlets: Optional[np.ndarray] = None  # (B,) live cloudlets per variant
+    mips_dist: Optional[np.ndarray] = None   # (B,) MIPS-distribution id
 
     @property
     def n_scenarios(self) -> int:
@@ -188,25 +256,49 @@ class BatchSimulationResult:
                 **{f"t_{k}": v for k, v in self.timings.items()}}
 
 
-def _scenario(cfg, seed, mi_scale):
-    """One full scenario — entities + broker + scan core — pure-functionally
-    (no DataGrid side effects), so the whole pipeline vmaps."""
-    from repro.core.cloudsim import matchmaking_assign, round_robin_assign
+def grid_scenario_inputs(cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist):
+    """Entities for ONE grid variant at the padded (cfg.n_vms, cfg.n_cloudlets)
+    shape — pure and vmappable.  Shape padding: VMs beyond ``n_vms`` get
+    0 MIPS and cloudlets beyond ``n_cloudlets`` get ``valid=False``, so
+    heterogeneous variants stack into one batch and padded rows keep finish
+    time exactly 0 (the scan core's sentinel-segment invariant).
 
+    ``mips_dist`` selects the VM-capacity distribution family: 0 = uniform
+    over ``vm_mips_range``, 1 = fixed at the range midpoint, 2 = bimodal
+    (each VM at the low or high end, fair coin).
+    """
+    V, C = cfg.n_vms, cfg.n_cloudlets
     key = jax.random.PRNGKey(seed)
-    k1, k2 = jax.random.split(key)
+    k1, k2, k3 = jax.random.split(key, 3)
     lo, hi = cfg.vm_mips_range
-    vm_mips = jax.random.uniform(k1, (cfg.n_vms,), minval=lo, maxval=hi)
-    lo, hi = cfg.cloudlet_mi_range
-    mi = jax.random.uniform(k2, (cfg.n_cloudlets,), minval=lo,
-                            maxval=hi) * mi_scale
-    valid = jnp.ones((cfg.n_cloudlets,), bool)
-    ids = jnp.arange(cfg.n_cloudlets, dtype=jnp.int32)
+    mips_u = jax.random.uniform(k1, (V,), minval=lo, maxval=hi)
+    mips_f = jnp.full((V,), (lo + hi) / 2.0, jnp.float32)
+    mips_b = jnp.where(jax.random.bernoulli(k3, 0.5, (V,)), hi, lo)
+    vm_mips = jnp.select([mips_dist == 0, mips_dist == 1],
+                         [mips_u, mips_f], mips_b)
+    vm_valid = jnp.arange(V) < n_vms
+    vm_mips = jnp.where(vm_valid, vm_mips, 0.0)
 
-    if cfg.broker == "round_robin":
-        assign = round_robin_assign(ids, cfg.n_vms)
-    else:
-        assign = matchmaking_assign(ids, mi, vm_mips, cfg.n_vms)
+    lo, hi = cfg.cloudlet_mi_range
+    mi = jax.random.uniform(k2, (C,), minval=lo, maxval=hi) * mi_scale
+    valid = jnp.arange(C) < n_cloudlets
+    mi = jnp.where(valid, mi, 0.0)
+    return vm_mips, vm_valid, mi, valid
+
+
+def _grid_scenario(cfg, seed, mi_scale, broker, n_vms, n_cloudlets,
+                   mips_dist):
+    """One full scenario — entities + broker + scan core — pure-functionally
+    (no DataGrid side effects) with every grid axis a traced scalar, so the
+    whole pipeline vmaps over a heterogeneous variant stack."""
+    from repro.core.cloudsim import matchmaking_assign_masked
+
+    vm_mips, vm_valid, mi, valid = grid_scenario_inputs(
+        cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist)
+    ids = jnp.arange(cfg.n_cloudlets, dtype=jnp.int32)
+    rr = (ids % n_vms).astype(jnp.int32)
+    mm = matchmaking_assign_masked(ids, mi, vm_mips, vm_valid)
+    assign = jnp.where(broker == BROKER_IDS["round_robin"], rr, mm)
     finish, makespan = simulate_completion_scan(assign, mi, vm_mips, valid,
                                                 use_kernel=cfg.use_kernel)
     return assign, finish, makespan
@@ -214,36 +306,157 @@ def _scenario(cfg, seed, mi_scale):
 
 @functools.lru_cache(maxsize=32)
 def _batch_fn(cfg):
-    """Jitted vmap of the scenario pipeline, cached per (hashable, frozen)
-    config so repeated sweeps with the same cfg and batch shape reuse the
-    compiled executable."""
-    return jax.jit(jax.vmap(functools.partial(_scenario, cfg)))
+    """Jitted vmap of the grid-scenario pipeline, cached per (hashable,
+    frozen) config so repeated sweeps with the same cfg and batch shape
+    reuse the compiled executable."""
+    return jax.jit(jax.vmap(functools.partial(_grid_scenario, cfg)))
 
 
-def run_simulation_batch(cfg, seeds, *, mi_scale=None) -> BatchSimulationResult:
-    """Execute a stack of scenario variants in a SINGLE jitted vmap.
+@functools.lru_cache(maxsize=32)
+def _batch_dist_fn(cfg, mesh, axis):
+    """Batch-sharded grid: the scenario vmap INSIDE the partitioned
+    member_fn, so a grid of B variants shards B/n-per-member across the
+    mesh — CloudSim-scale scenario throughput from data-parallel members."""
+    from repro.core.executor import DistributedExecutor
 
-    seeds: (B,) int array — one PRNG stream per scenario.
-    mi_scale: optional (B,) multiplier on cloudlet lengths (workload sweep).
-    The closed-form core has no data-dependent loop, so B scenarios cost one
-    XLA dispatch; ≥32 variants per jit is the intended operating point.
-    ``cfg.use_kernel`` is honored; only the vmappable ``core="scan"`` is
-    supported (the wave loop and the shard_map path don't batch).
+    executor = DistributedExecutor(mesh, axis)
+
+    def member_fn(local):
+        return jax.vmap(functools.partial(_grid_scenario, cfg))(*local)
+
+    def call(seeds, scale, broker, n_vms, n_cl, mips_dist):
+        return executor.execute_on_key_owners(
+            member_fn, (seeds, scale, broker, n_vms, n_cl, mips_dist),
+            out_specs=P(axis))
+
+    return jax.jit(call)
+
+
+def _axis_array(value, B, dtype, name, id_map=None):
+    """Normalize one grid axis to a (B,) array: scalars broadcast, str
+    entries map through ``id_map`` (broker / MIPS-distribution names)."""
+    if value is None:
+        return None
+    if isinstance(value, str) or np.isscalar(value):
+        value = [value] * B
+    vals = value if hasattr(value, "dtype") else np.asarray(value)
+    if getattr(vals.dtype, "kind", "") in "USO":   # names -> ids
+        vals = np.asarray([id_map[str(v)] for v in np.asarray(vals).ravel()])
+    arr = jnp.asarray(vals, dtype)
+    if arr.shape != (B,):
+        raise ValueError(f"{name} must have shape ({B},), got {arr.shape}")
+    return arr
+
+
+def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
+                         n_vms=None, n_cloudlets=None, mips_dist=None,
+                         executor=None) -> BatchSimulationResult:
+    """Execute a multi-axis scenario GRID in a SINGLE jitted vmap.
+
+    seeds: (B,) int array — one PRNG stream per scenario.  The optional grid
+    axes are each a (B,) per-variant array (or a scalar applied to all):
+
+      mi_scale    — float multiplier on cloudlet lengths (workload sweep)
+      broker      — "round_robin" | "matchmaking" (names or BROKER_IDS ints)
+      n_vms       — live VM count ≤ cfg.n_vms; the rest are 0-MIPS padding
+      n_cloudlets — live cloudlet count ≤ cfg.n_cloudlets; rest valid=False
+      mips_dist   — "uniform" | "fixed" | "bimodal" (or MIPS_DIST_IDS ints)
+
+    The closed-form core has no data-dependent loop and every axis is a
+    traced scalar, so B heterogeneous variants cost one XLA dispatch; ≥96
+    variants per jit is the intended operating point.  With ``executor``
+    (a multi-member mesh) the grid is sharded B/n-per-member: the scenario
+    vmap runs inside the partitioned member_fn.  ``cfg.use_kernel`` is
+    honored; only the vmappable ``core="scan"`` is supported (the wave loop
+    doesn't batch).
     """
     if cfg.core != "scan":
         raise ValueError(
             f"run_simulation_batch only supports core='scan', got {cfg.core!r}")
     seeds = jnp.asarray(seeds, jnp.int32)
     B = seeds.shape[0]
-    scale = (jnp.ones((B,), jnp.float32) if mi_scale is None
-             else jnp.asarray(mi_scale, jnp.float32))
 
-    fn = _batch_fn(cfg)
+    def default(arr, fill, dtype):
+        return jnp.full((B,), fill, dtype) if arr is None else arr
+
+    scale = default(_axis_array(mi_scale, B, jnp.float32, "mi_scale"),
+                    1.0, jnp.float32)
+    broker = default(_axis_array(broker, B, jnp.int32, "broker", BROKER_IDS),
+                     BROKER_IDS[cfg.broker], jnp.int32)
+    n_vms = default(_axis_array(n_vms, B, jnp.int32, "n_vms"),
+                    cfg.n_vms, jnp.int32)
+    n_cl = default(_axis_array(n_cloudlets, B, jnp.int32, "n_cloudlets"),
+                   cfg.n_cloudlets, jnp.int32)
+    # live counts must fit the padded shapes — JAX's clamping gather would
+    # otherwise turn an oversized variant into silently-wrong results
+    for name, arr, cap in (("n_vms", n_vms, cfg.n_vms),
+                           ("n_cloudlets", n_cl, cfg.n_cloudlets)):
+        lo, hi = int(arr.min()), int(arr.max())
+        if lo < 1 or hi > cap:
+            raise ValueError(f"{name} axis must lie in [1, {cap}] "
+                             f"(the padded cfg shape), got [{lo}, {hi}]")
+    mips_dist = default(_axis_array(mips_dist, B, jnp.int32, "mips_dist",
+                                    MIPS_DIST_IDS),
+                        MIPS_DIST_IDS["uniform"], jnp.int32)
+    args = (seeds, scale, broker, n_vms, n_cl, mips_dist)
+
     t0 = time.perf_counter()
-    assign, finish, makespans = fn(seeds, scale)
+    if executor is not None and executor.n_members > 1:
+        n = executor.n_members
+        pad = (-B) % n                   # round B up to a whole shard each
+        if pad:
+            args = tuple(jnp.concatenate([a, a[-1:].repeat(pad)])
+                         for a in args)
+        fn = _batch_dist_fn(cfg, executor.mesh, executor.axis)
+        assign, finish, makespans = (o[:B] for o in fn(*args))
+    else:
+        assign, finish, makespans = _batch_fn(cfg)(*args)
     jax.block_until_ready(makespans)
     wall = time.perf_counter() - t0
     return BatchSimulationResult(
         vm_assign=np.asarray(assign), finish_times=np.asarray(finish),
         makespans=np.asarray(makespans),
-        timings={"batch_total": wall, "per_scenario": wall / max(B, 1)})
+        timings={"batch_total": wall, "per_scenario": wall / max(B, 1)},
+        broker=np.asarray(broker), n_vms=np.asarray(n_vms),
+        n_cloudlets=np.asarray(n_cl), mips_dist=np.asarray(mips_dist))
+
+
+def make_scenario_grid(seeds: Sequence[int],
+                       mi_scales: Sequence[float] = (1.0,),
+                       brokers: Sequence[Union[str, int]] = ("round_robin",),
+                       vm_counts: Sequence[int] = (0,),
+                       cloudlet_counts: Sequence[int] = (0,),
+                       mips_dists: Sequence[Union[str, int]] = ("uniform",),
+                       ) -> Dict[str, np.ndarray]:
+    """Cartesian product of grid axes → per-variant (B,) arrays, B = the
+    product of axis lengths.  A 0 in ``vm_counts``/``cloudlet_counts`` means
+    "the config's full count" — the sentinel is resolved against a config by
+    ``run_scenario_grid(cfg, grid)``, the intended way to execute the
+    product."""
+    brokers = [BROKER_IDS[b] if isinstance(b, str) else int(b)
+               for b in brokers]
+    mips_dists = [MIPS_DIST_IDS[d] if isinstance(d, str) else int(d)
+                  for d in mips_dists]
+    axes = np.meshgrid(np.asarray(seeds, np.int32),
+                       np.asarray(mi_scales, np.float32),
+                       np.asarray(brokers, np.int32),
+                       np.asarray(vm_counts, np.int32),
+                       np.asarray(cloudlet_counts, np.int32),
+                       np.asarray(mips_dists, np.int32), indexing="ij")
+    flat = [a.ravel() for a in axes]
+    return {"seeds": flat[0], "mi_scale": flat[1], "broker": flat[2],
+            "n_vms": flat[3], "n_cloudlets": flat[4], "mips_dist": flat[5]}
+
+
+def run_scenario_grid(cfg, grid: Dict[str, np.ndarray], *,
+                      executor=None) -> BatchSimulationResult:
+    """Run a ``make_scenario_grid`` product through ``run_simulation_batch``
+    (0-valued VM/cloudlet counts resolve to the config's full counts)."""
+    g = dict(grid)
+    g["n_vms"] = np.where(np.asarray(g["n_vms"]) == 0, cfg.n_vms,
+                          g["n_vms"]).astype(np.int32)
+    g["n_cloudlets"] = np.where(np.asarray(g["n_cloudlets"]) == 0,
+                                cfg.n_cloudlets,
+                                g["n_cloudlets"]).astype(np.int32)
+    seeds = g.pop("seeds")
+    return run_simulation_batch(cfg, seeds, executor=executor, **g)

@@ -21,7 +21,7 @@ import dataclasses
 import enum
 from typing import Callable, Dict, List, Optional
 
-from repro.core.health import HealthConfig, HealthMonitor
+from repro.core.health import HealthConfig, HealthMonitor, HealthSample
 
 TERMINATE_ALL_FLAG = -999   # the thesis's shutdown sentinel
 
@@ -109,10 +109,23 @@ class ElasticController:
         self.probe = AdaptiveScalerProbe(cfg)
         self.ias = IntelligentAdaptiveScaler(cfg, n_instances)
         self.remesh_fn = remesh_fn
+        self._sim_step = 0                # tick() counter (simulation driver)
 
     @property
     def n_instances(self) -> int:
         return self.ias.state.n_instances
+
+    def tick(self, load: float) -> Decision:
+        """Drive the scaler from a SIMULATION-side load signal: callers with
+        no training step loop (e.g. the elastic DES cluster) feed one
+        normalized load sample (observed/target, the paper's process-CPU
+        analogue) per completed simulation; the step counter is managed
+        internally so hysteresis (``time_between_scaling``) still applies."""
+        self._sim_step += 1
+        return self.on_step(HealthSample(
+            step=self._sim_step,
+            step_time=load * self.cfg.target_step_time,
+            loss=0.0, grad_norm=0.0))
 
     def on_step(self, sample) -> Decision:
         self.monitor.observe(sample)

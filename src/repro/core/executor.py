@@ -23,6 +23,13 @@ class DistributedExecutor:
         self.mesh = mesh
         self.axis = axis
 
+    @classmethod
+    def for_devices(cls, devices, axis: str = "data") -> "DistributedExecutor":
+        """Executor over an explicit device list — the elastic cluster
+        rebuilds one per scale event from its (fixed) device pool."""
+        import numpy as np
+        return cls(Mesh(np.array(devices), (axis,)), axis)
+
     @property
     def n_members(self) -> int:
         return self.mesh.shape[self.axis]

@@ -102,6 +102,25 @@ class DataGrid:
         self._store[name] = dataclasses.replace(e, value=out)
         return out
 
+    # ------------------------------------------------------------ elasticity
+    def remesh(self, mesh: Mesh) -> int:
+        """Elastic re-shard (scale event): re-home every entry onto the new
+        mesh with its original spec — the IMap's virtual partitions migrating
+        to the new member set.  Logical content is unchanged; only device
+        placement moves.  Entry leading dims must divide the new member
+        count (entities are padded via ``pad_to_shards`` at creation).
+        Returns the number of entries re-homed."""
+        self.mesh = mesh
+        for name, e in list(self._store.items()):
+            value = jax.device_put(e.value, self._sharding(e.spec))
+            # backups are neighbor-rolled by the OLD shard size — rebuild
+            # them for the new member count, else fail-over would restore a
+            # stale-offset shard
+            backup = None if e.backup is None else self._make_backup(value)
+            self._store[name] = dataclasses.replace(e, value=value,
+                                                    backup=backup)
+        return len(self._store)
+
     def replicate(self, name: str) -> jax.Array:
         """Near-cache: a fully-replicated copy (memory for latency)."""
         e = self._store[name]

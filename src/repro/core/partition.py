@@ -3,16 +3,23 @@
 Cloud²Sim tracks each distributed data structure with per-instance ID ranges
 computed from an instance *offset* (``getPartitionInit``/``getPartitionFinal``,
 ported verbatim below), and hashes keys onto 271 virtual partitions
-(``hash(key) % 271``) that are re-balanced when instances join/leave.  Here the
-"instances" are mesh devices (or data-axis shards) and the virtual partitions
-make elastic re-sharding cheap: when the shard count changes, only the moved
-virtual partitions' data re-homes (consistent-hashing property).
+(``partitionOf(key) % 271``) that are re-balanced when instances join/leave.
+Here the "instances" are mesh devices (or data-axis shards) and the virtual
+partitions make elastic re-sharding cheap: when the shard count changes, only
+the moved virtual partitions' data re-homes (consistent-hashing property).
+
+Key hashing is DETERMINISTIC across processes: ``zlib.crc32`` for str/bytes
+keys and plain modulo for ints, so a partition table built on one controller
+reproduces bit-for-bit on any member regardless of ``PYTHONHASHSEED``
+(Python's randomized str hash would silently re-home every string key between
+runs — the classic split-brain the thesis's IAtomicLong guards against).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Tuple
+import zlib
+from typing import List, Tuple, Union
 
 import numpy as np
 
@@ -38,9 +45,20 @@ def partition_ranges(no_of_params: int, n_instances: int) -> List[Tuple[int, int
             for i in range(n_instances)]
 
 
-def key_partition(key: int, partition_count: int = DEFAULT_PARTITION_COUNT) -> int:
-    """hash(key) % partitionCount — Hazelcast's data partition table."""
-    return hash(key) % partition_count
+def key_partition(key: Union[int, str, bytes],
+                  partition_count: int = DEFAULT_PARTITION_COUNT) -> int:
+    """key -> virtual partition, Hazelcast's data partition table.
+
+    Process-independent: str/bytes keys go through ``zlib.crc32`` (stable,
+    documented to be consistent across platforms and Python versions); int
+    keys are taken modulo directly.  Never uses ``hash()``, whose str variant
+    is salted by ``PYTHONHASHSEED``.
+    """
+    if isinstance(key, str):
+        key = key.encode("utf-8")
+    if isinstance(key, (bytes, bytearray)):
+        return zlib.crc32(key) % partition_count
+    return int(key) % partition_count
 
 
 @dataclasses.dataclass
@@ -49,7 +67,8 @@ class PartitionTable:
 
     ``rebalance(n)`` reassigns with minimal movement (partitions keep their
     owner when possible — the paper's "minimal reshuffling of objects when a
-    new instance joins").
+    new instance joins"): only partitions on departed members or on members
+    above the balanced ceiling re-home.
     """
     partition_count: int = DEFAULT_PARTITION_COUNT
     n_instances: int = 1
@@ -57,23 +76,34 @@ class PartitionTable:
     def __post_init__(self):
         self.owner = np.arange(self.partition_count) % self.n_instances
 
-    def owner_of(self, key: int) -> int:
+    def owner_of(self, key: Union[int, str, bytes]) -> int:
         return int(self.owner[key_partition(key, self.partition_count)])
+
+    def owners_of_range(self, n_keys: int) -> np.ndarray:
+        """Vectorized owner lookup for int keys 0..n_keys-1 — the VM→member
+        map the elastic scan core ships to devices as a runtime operand."""
+        parts = np.arange(n_keys, dtype=np.int64) % self.partition_count
+        return self.owner[parts].astype(np.int32)
 
     def rebalance(self, n_instances: int) -> int:
         """Returns the number of virtual partitions that moved (kept minimal:
         only partitions on departed or overfull members re-home)."""
+        if n_instances < 1:
+            raise ValueError(f"n_instances must be >= 1, got {n_instances}")
         counts = np.bincount(self.owner[self.owner < n_instances],
                              minlength=n_instances)
         moved = 0
-        # 1) re-home partitions of departed members
+        # 1) re-home partitions of departed members (forced moves)
         for p in range(self.partition_count):
             if self.owner[p] >= n_instances:
                 new_o = int(np.argmin(counts))
                 self.owner[p] = new_o
                 counts[new_o] += 1
                 moved += 1
-        # 2) level: move from the fullest to the emptiest until balanced
+        # 2) level: move from the fullest to the emptiest until balanced.
+        # Each move comes off a member strictly above the final balanced
+        # level, so the count of moves is exactly the surviving members'
+        # excess over that level — no gratuitous shuffling.
         while counts.max() - counts.min() > 1:
             src, dst = int(np.argmax(counts)), int(np.argmin(counts))
             p = int(np.nonzero(self.owner == src)[0][0])

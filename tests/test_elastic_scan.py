@@ -1,0 +1,171 @@
+"""Elastic re-shard of the distributed scan core (PAPER §4.1.3 / §4.3).
+
+The IntelligentAdaptiveScaler grows and shrinks the member set MID-RUN; the
+``PartitionTable``-backed VM→member map re-homes only the moved virtual
+partitions; and because ownership is a runtime operand of the compiled
+distributed core, finish vectors stay BIT-identical (atol 0) across every
+scale event — the thesis's accuracy claim under elasticity.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.partition import (DEFAULT_PARTITION_COUNT, PartitionTable,
+                                  key_partition)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_elastic_scale_out_in_equivalence():
+    """Scale-out 1→2→4 and scale-in 4→2 mid-run: every simulation's finish
+    vector is identical (atol 0) to a single fixed-mesh run."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import dataclasses
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.core.cloudsim import (ElasticSimulationCluster, SimulationConfig,
+                                 run_simulation)
+from repro.core.health import HealthConfig
+
+devs = jax.devices()
+cfg = SimulationConfig(n_vms=40, n_cloudlets=80, broker="matchmaking",
+                       core="scan_dist")
+# the oracle: one fixed-mesh single-member scan run
+fixed = run_simulation(dataclasses.replace(cfg, core="scan"),
+                       Mesh(np.array(devs[:1]), ("data",)))
+
+hc = HealthConfig(target_step_time=1.0, max_threshold=0.8, min_threshold=0.2,
+                  time_between_scaling=1, window=1, max_instances=4)
+cl = ElasticSimulationCluster(devices=devs, health_cfg=hc, start_members=1)
+results = [cl.simulate(cfg)]
+member_path = [cl.n_members]
+for load, expect in [(2.0, 2), (2.0, 4), (0.05, 2)]:    # out, out, in
+    cl.observe_load(load)
+    assert cl.n_members == expect, (cl.n_members, expect)
+    member_path.append(cl.n_members)
+    results.append(cl.simulate(cfg))
+assert member_path == [1, 2, 4, 2], member_path
+
+for i, r in enumerate(results):
+    assert np.array_equal(fixed.finish_times, r.finish_times), i
+    assert fixed.makespan == r.makespan, i
+
+# each scale event re-homed only the minimal number of virtual partitions
+# (a member-count doubling/halving moves ~half the table) and retired
+# exactly the outgoing mesh's compiled core
+for ev in cl.scale_events:
+    assert ev["moved_partitions"] <= 271 // 2 + 2, ev
+    assert ev["retired_cores"] == 1, ev
+# ownership always covers every VM over the live members
+owner = np.asarray(cl.vm_owner(40))
+assert owner.shape == (40,) and (owner >= 0).all() and (owner < 2).all()
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_invalidate_dist_core_is_targeted():
+    """A scale event retires only the outgoing mesh's compiled cores."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.des_scan import (_DIST_CORE_CACHE, invalidate_dist_core,
+                                     simulate_completion_distributed)
+    from repro.core.executor import DistributedExecutor
+
+    invalidate_dist_core()
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    ex = DistributedExecutor(mesh)
+    args = (jnp.zeros(8, jnp.int32), jnp.ones(8), jnp.ones(4),
+            jnp.ones(8, bool))
+    simulate_completion_distributed(*args, ex)                   # V=4
+    simulate_completion_distributed(args[0], args[1], jnp.ones(8),
+                                    args[3], ex)                 # V=8
+    assert len(_DIST_CORE_CACHE) == 2
+    other = Mesh(np.array(jax.devices()[:1]), ("other",))
+    assert invalidate_dist_core(other) == 0                      # no match
+    assert len(_DIST_CORE_CACHE) == 2
+    assert invalidate_dist_core(mesh) == 2                       # targeted
+    assert len(_DIST_CORE_CACHE) == 0
+
+
+def test_grid_remesh_rebuilds_backups():
+    """Regression: backups are neighbor-rolled by the OLD shard size; a
+    remesh must rebuild them or fail-over restores a stale-offset shard."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.grid import DataGrid
+devs = jax.devices()
+grid = DataGrid(Mesh(np.array(devs[:4]), ("data",)), backup_count=1)
+grid.put("x", jnp.arange(8.0))
+grid.remesh(Mesh(np.array(devs[:2]), ("data",)))
+restored = grid.restore_from_backup("x", lost_member=0)
+assert np.array_equal(np.asarray(restored), np.arange(8.0)), restored
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=600)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_rebalance_movement_minimal_randomized():
+    """Across random join/leave sequences: every partition owned by a live
+    member, load spread ≤ 1, and movement ≤ forced (departed members'
+    partitions) + leveling excess (above the balanced floor)."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        pt = PartitionTable(n_instances=int(rng.integers(1, 17)))
+        for n_new in rng.integers(1, 17, size=6):
+            n_new = int(n_new)
+            before = pt.owner.copy()
+            counts = np.bincount(before[before < n_new], minlength=n_new)
+            forced = int((before >= n_new).sum())
+            floor = pt.partition_count // n_new
+            excess = int(np.maximum(counts - floor, 0).sum())
+            moved = pt.rebalance(n_new)
+            load = pt.load()
+            assert load.sum() == pt.partition_count
+            assert (pt.owner >= 0).all() and (pt.owner < n_new).all()
+            assert load.max() - load.min() <= 1
+            assert int((pt.owner != before).sum()) <= moved
+            assert moved <= forced + excess, (forced, excess, moved)
+
+
+def test_rebalance_noop_when_stable():
+    pt = PartitionTable(n_instances=4)
+    assert pt.rebalance(4) == 0
+    pt2 = PartitionTable(n_instances=1)
+    moved_out = pt2.rebalance(2)
+    assert moved_out in (DEFAULT_PARTITION_COUNT // 2,
+                         DEFAULT_PARTITION_COUNT // 2 + 1)
+    # scaling back: only the second member's partitions re-home
+    assert pt2.rebalance(1) == moved_out
+
+
+def test_key_partition_deterministic_across_processes():
+    """Regression: str keys hash via zlib.crc32, so partition tables
+    reproduce across processes regardless of PYTHONHASHSEED (Python's salted
+    str hash used to re-home every string key between runs)."""
+    keys = ["vm-0", "vm-17", "cloudlet-123", "datacenter/3", ""]
+    expected = [key_partition(k) for k in keys]
+    prog = ("import sys; sys.path.insert(0, %r); "
+            "from repro.core.partition import key_partition; "
+            "print([key_partition(k) for k in %r])" % (SRC, keys))
+    outs = []
+    for seed in ("0", "1", "31337"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        r = subprocess.run([sys.executable, "-c", prog], env=env,
+                           capture_output=True, text=True, timeout=120)
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout.strip())
+    assert outs[0] == outs[1] == outs[2] == str(expected)
+    # int keys stay plain modulo (PartitionUtil semantics)
+    assert key_partition(271) == 0 and key_partition(272) == 1
+    # bytes and str agree
+    assert key_partition(b"vm-17") == key_partition("vm-17")

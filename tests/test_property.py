@@ -7,7 +7,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.partition import (PartitionTable, partition_ranges)
+from repro.core.partition import (PartitionTable, key_partition,
+                                  partition_ranges)
 from repro.core.speedup import SpeedupModel
 from repro.models.moe import matchmaking_route
 from repro.kernels.histogram.ref import histogram_ref
@@ -35,6 +36,45 @@ def test_partition_table_balanced_after_rebalance(start, new):
     load = pt.load()
     assert load.sum() == 271
     assert load.max() - load.min() <= 1
+
+
+@given(start=st.integers(1, 16),
+       seq=st.lists(st.integers(1, 16), min_size=1, max_size=8))
+@SETTINGS
+def test_partition_table_rebalance_sequences(start, seq):
+    """Across random join/leave sequences: every partition owned by a live
+    member, load spread ≤ 1, and movement minimal — at most the partitions
+    owned by departed members (forced) plus those above the balanced floor
+    on overfull survivors (leveling excess)."""
+    pt = PartitionTable(n_instances=start)
+    for n_new in seq:
+        before = pt.owner.copy()
+        counts = np.bincount(before[before < n_new], minlength=n_new)
+        forced = int((before >= n_new).sum())
+        excess = int(np.maximum(counts - pt.partition_count // n_new,
+                                0).sum())
+        moved = pt.rebalance(n_new)
+        load = pt.load()
+        assert load.sum() == pt.partition_count
+        assert (pt.owner >= 0).all() and (pt.owner < n_new).all()
+        assert load.max() - load.min() <= 1
+        assert moved <= forced + excess
+        # unchanged membership never shuffles anything
+        assert pt.rebalance(n_new) == 0
+
+
+@given(key=st.one_of(st.integers(0, 2 ** 40), st.text(max_size=32),
+                     st.binary(max_size=32)),
+       count=st.sampled_from([7, 271, 1024]))
+@SETTINGS
+def test_key_partition_in_range_and_pure(key, count):
+    """key_partition is a pure total function into [0, count) — and str/bytes
+    agree, since str keys are crc32-hashed over their UTF-8 encoding."""
+    p = key_partition(key, count)
+    assert 0 <= p < count
+    assert key_partition(key, count) == p
+    if isinstance(key, str):
+        assert key_partition(key.encode("utf-8"), count) == p
 
 
 @given(t=st.integers(4, 64), e=st.integers(2, 8), k=st.integers(1, 3),
