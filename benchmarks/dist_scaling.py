@@ -1,0 +1,111 @@
+"""Distributed phase-4 scaling — replicated vs owner-keyed bucket-sort core.
+
+Sweeps C ∈ {50k, 200k, 1M} × members ∈ {1, 2, 4, 8} and writes
+``BENCH_dist.json``: per-member wall time, scaling efficiency, and the
+exchange/replicated ratio per (C, M) point.  The replicated PR-2 core runs
+the full O(C log C) lexsort+scan on EVERY member; the exchange core
+all-to-alls each cloudlet to its VM-owner and sorts only ~C/M per member —
+so its per-member wall time must shrink as members are added while the
+replicated core's total work grows with M.
+
+Caveat recorded in the payload: benchmark members are host-emulated devices
+sharing one CPU, so ``scaling_efficiency`` (t1 / (M · tM)) reflects the
+algorithmic work partitioning, not parallel silicon — on real multi-chip
+meshes the exchange core's wall time additionally divides by the member
+count.  Override sizes with ``BENCH_DIST_SIZES``/``BENCH_DIST_MEMBERS``
+(comma-separated) to shrink the sweep.
+"""
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):      # standalone: python benchmarks/dist_scaling.py
+    _root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import emit
+from repro.core.des_scan import (_pow2_ceil, default_vm_owner,
+                                 simulate_completion_distributed)
+from repro.core.executor import DistributedExecutor
+from repro.core.partition import exchange_load
+
+BENCH_JSON = "BENCH_dist.json"
+SIZES = tuple(int(s) for s in os.environ.get(
+    "BENCH_DIST_SIZES", "50000,200000,1000000").split(","))
+MEMBERS = tuple(int(s) for s in os.environ.get(
+    "BENCH_DIST_MEMBERS", "1,2,4,8").split(","))
+N_VMS = 1024
+
+
+def _timed(fn, repeats):
+    jax.block_until_ready(fn())            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats
+
+
+def main():
+    devs = jax.devices()
+    members = [m for m in MEMBERS if m <= len(devs)]
+    rng = np.random.default_rng(0)
+    entries = []
+    for C in SIZES:
+        repeats = 2 if C >= 500_000 else 3
+        assign = jnp.asarray(rng.integers(0, N_VMS, C).astype(np.int32))
+        mi = jnp.asarray(rng.uniform(1e3, 5e4, C).astype(np.float32))
+        mips = jnp.asarray(rng.uniform(500, 2000, N_VMS).astype(np.float32))
+        valid = jnp.ones(C, bool)
+        base = {}                          # core -> wall at the smallest M
+        by_m = {}
+        for M in members:
+            ex = DistributedExecutor(Mesh(np.array(devs[:M]), ("data",)))
+            owner = default_vm_owner(N_VMS, M)
+            block = _pow2_ceil(int(exchange_load(owner, assign, valid,
+                                                 M).max()))
+            for core, kw in (("exchange", {"block": block}),
+                             ("replicated", {"method": "replicated"})):
+                wall = _timed(lambda: simulate_completion_distributed(
+                    assign, mi, mips, valid, ex, vm_owner=owner, **kw),
+                    repeats)
+                base.setdefault(core, wall)
+                entry = {"core": core, "n_cloudlets": C, "n_members": M,
+                         "scan_s": wall,
+                         "speedup_vs_1": base[core] / wall,
+                         "scaling_efficiency": base[core] / (M * wall)}
+                if core == "exchange":
+                    entry["block"] = block
+                    entry["recv_capacity"] = M * block  # per-member sort size
+                entries.append(entry)
+                by_m[(core, M)] = entry
+            ratio = (by_m[("exchange", M)]["scan_s"] /
+                     by_m[("replicated", M)]["scan_s"])
+            by_m[("exchange", M)]["vs_replicated"] = ratio
+            emit(f"dist/cl{C}/n{M}/exchange",
+                 by_m[("exchange", M)]["scan_s"] * 1e6,
+                 f"{ratio:.2f}x-of-replicated")
+            emit(f"dist/cl{C}/n{M}/replicated",
+                 by_m[("replicated", M)]["scan_s"] * 1e6,
+                 f"eff={by_m[('replicated', M)]['scaling_efficiency']:.2f}")
+    return {"n_vms": N_VMS, "members": members,
+            "note": ("host-emulated members share one CPU: "
+                     "scaling_efficiency measures algorithmic work "
+                     "partitioning, not parallel silicon"),
+            "entries": entries}
+
+
+if __name__ == "__main__":
+    _path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         BENCH_JSON)
+    with open(_path, "w") as f:
+        json.dump(main(), f, indent=2)
+    print(f"wrote {_path}")

@@ -1,14 +1,22 @@
 """Benchmark harness — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.  Runs on 8 emulated host devices
-(the thesis's research-lab-cluster analogue); set BEFORE jax import."""
-import os
+(the thesis's research-lab-cluster analogue); set BEFORE jax import.
 
-if "--one-device" not in __import__("sys").argv:
+``--check`` re-runs only the modules that declare a JSON artifact and FAILS
+(exit 1) if any ``scan_s`` entry regressed by more than 20% against the
+committed BENCH files — the committed files are left untouched.
+"""
+import os
+import sys
+
+if "--one-device" not in sys.argv:
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
+if "--check" in sys.argv:
+    # regression checks only compare scan_s: skip the slow wave-loop replays
+    os.environ.setdefault("BENCH_CORE_WAVE_BUDGET_S", "0")
 
 import json
-import sys
 import traceback
 
 # make `python benchmarks/run.py` work from anywhere (repo root + src)
@@ -16,30 +24,101 @@ _root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 sys.path.insert(0, _root)
 sys.path.insert(0, os.path.join(_root, "src"))
 
+REGRESSION_TOLERANCE = 0.20
+# entry fields that identify a scan_s measurement across runs
+_ID_KEYS = ("core", "n_cloudlets", "n_members", "n_scenarios", "n_vms")
+
+
+def _scan_entries(obj, out):
+    """Collect every ``scan_s`` in a payload, labelled by its identifying
+    sibling fields — the committed-vs-fresh join key for ``--check``."""
+    if isinstance(obj, dict):
+        if "scan_s" in obj:
+            label = tuple((k, obj[k]) for k in _ID_KEYS if k in obj)
+            out[label] = float(obj["scan_s"])
+        for v in obj.values():
+            _scan_entries(v, out)
+    elif isinstance(obj, list):
+        for v in obj:
+            _scan_entries(v, out)
+    return out
+
+
+def _check_payload(mod, payload, path):
+    """Compare fresh scan_s timings against the committed BENCH file."""
+    if not os.path.exists(path):
+        return [f"{mod.__name__}: no committed {os.path.basename(path)} "
+                f"to check against"]
+    with open(path) as f:
+        committed = _scan_entries(json.load(f), {})
+    fresh = _scan_entries(payload, {})
+    problems = []
+    for label, old in sorted(committed.items()):
+        new = fresh.get(label)
+        if new is None:
+            continue                     # shrunk sweep: nothing to compare
+        if new > old * (1.0 + REGRESSION_TOLERANCE):
+            name = ",".join(f"{k}={v}" for k, v in label) or "scan"
+            problems.append(f"{os.path.basename(path)}[{name}]: scan_s "
+                            f"{old:.4f}s -> {new:.4f}s "
+                            f"(+{(new / old - 1) * 100:.0f}%)")
+    return problems
+
 
 def main() -> None:
-    from benchmarks import (batch_grid, core_scaling, fig_5_1_scaling,
-                            fig_5_4_matchmaking, fig_5_9_mapreduce,
-                            serve_brokers, speedup_model, table_5_1,
-                            table_5_2_elastic)
+    from benchmarks import (batch_grid, core_scaling, dist_scaling,
+                            fig_5_1_scaling, fig_5_4_matchmaking,
+                            fig_5_9_mapreduce, serve_brokers, speedup_model,
+                            table_5_1, table_5_2_elastic)
+    check = "--check" in sys.argv
+    mods = (table_5_1, core_scaling, batch_grid, dist_scaling,
+            fig_5_1_scaling, fig_5_4_matchmaking, fig_5_9_mapreduce,
+            table_5_2_elastic, speedup_model, serve_brokers)
+    if check:
+        # only modules whose COMMITTED artifact holds scan_s entries can be
+        # compared — skip the rest (e.g. batch_grid's throughput-only JSON)
+        # instead of re-running their sweeps for nothing
+        def checkable(m):
+            path = os.path.join(_root, getattr(m, "BENCH_JSON", "") or "")
+            if not getattr(m, "BENCH_JSON", None):
+                return False
+            if not os.path.exists(path):
+                return True          # surfaces the "no committed file" error
+            with open(path) as f:
+                return bool(_scan_entries(json.load(f), {}))
+
+        mods = [m for m in mods if checkable(m)]
     print("name,us_per_call,derived")
-    for mod in (table_5_1, core_scaling, batch_grid, fig_5_1_scaling,
-                fig_5_4_matchmaking, fig_5_9_mapreduce, table_5_2_elastic,
-                speedup_model, serve_brokers):
+    problems = []
+    for mod in mods:
         try:
             payload = mod.main()
             # modules that declare a JSON artifact get it written here
-            # (core_scaling -> BENCH_core.json: old-vs-new core timings),
-            # anchored at the repo root regardless of the invoking CWD
+            # (core_scaling -> BENCH_core.json, dist_scaling ->
+            # BENCH_dist.json, ...), anchored at the repo root regardless of
+            # the invoking CWD; in --check mode the files are compared, not
+            # rewritten
             if payload is not None and getattr(mod, "BENCH_JSON", None):
                 path = os.path.join(_root, mod.BENCH_JSON)
-                with open(path, "w") as f:
-                    json.dump(payload, f, indent=2)
-                print(f"# wrote {path}", flush=True)
+                if check:
+                    problems += _check_payload(mod, payload, path)
+                else:
+                    with open(path, "w") as f:
+                        json.dump(payload, f, indent=2)
+                    print(f"# wrote {path}", flush=True)
         except Exception:
             print(f"{mod.__name__},FAILED,", flush=True)
             traceback.print_exc()
             sys.exit(1)
+    if check:
+        if problems:
+            print(f"# REGRESSION: {len(problems)} scan_s timing(s) exceeded "
+                  f"the {REGRESSION_TOLERANCE:.0%} budget", flush=True)
+            for p in problems:
+                print(f"#   {p}", flush=True)
+            sys.exit(1)
+        print("# check OK: no scan_s regression > "
+              f"{REGRESSION_TOLERANCE:.0%}", flush=True)
 
 
 if __name__ == "__main__":

@@ -15,21 +15,26 @@ Execution phases, mirroring §3.4.1.2 / Fig 3.10:
                                VM table replicated — executeOnKeyOwner)
   3. cloudlet workloads       (distributed: the ``isLoaded`` real compute)
   4. core event simulation    (distributed: the closed-form segmented-scan
-                               core in ``des_scan`` partitions independent
-                               per-VM completion segments over members —
-                               the thesis left this phase master-only
-                               because "tightly coupled core fragments are
-                               not distributed", §4; the closed form
-                               decouples them)
+                               core in ``des_scan`` re-homes each cloudlet
+                               to its VM-owner member with one owner-keyed
+                               all-to-all and each member sorts + scans only
+                               its own ~C/M cloudlets — the thesis left this
+                               phase master-only because "tightly coupled
+                               core fragments are not distributed", §4; the
+                               closed form decouples them and the exchange
+                               makes phase 4 COMPUTE-partitioned end-to-end)
 ``SimulationConfig.core`` selects the phase-4 engine: "scan" (default,
-O(C log C) closed form), "scan_dist" (scan partitioned over members),
-"wave" (the original master-only event loop — kept as the equivalence
-oracle).  Outputs are identical regardless of the number of members (tests
-assert the thesis's accuracy claim).
+O(C log C) closed form), "scan_dist" (scan partitioned over members;
+``dist_method`` picks the owner-keyed "exchange" pipeline or the PR-2
+"replicated" baseline), "wave" (the original master-only event loop — kept
+as the equivalence oracle).  Outputs are identical regardless of the number
+of members (tests assert the thesis's accuracy claim).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import math
 import time
 from typing import Dict, Optional
 
@@ -54,6 +59,8 @@ class SimulationConfig:
     cloudlet_mi_range: tuple = (1000.0, 50000.0)   # million instructions
     broker: str = "round_robin"                    # | "matchmaking"
     core: str = "scan"                             # | "scan_dist" | "wave"
+    dist_method: str = "exchange"                  # | "replicated" (PR-2 core)
+    exchange_slack: Optional[float] = None         # None = exact auto capacity
     use_kernel: bool = False                       # Pallas seg-scan kernel
     is_loaded: bool = False                        # attach a real workload
     workload_dim: int = 64                         # loaded-matmul size
@@ -63,10 +70,18 @@ class SimulationConfig:
 
 # ----------------------------------------------------------------- entities
 
-def create_entities(cfg: SimulationConfig, grid: DataGrid) -> Dict[str, jax.Array]:
+def create_entities(cfg: SimulationConfig, grid: DataGrid,
+                    pad_multiple: int = 1) -> Dict[str, jax.Array]:
     """Create datacenters/hosts/VMs/cloudlets into the data grid (padded so
-    every member owns an equal partition, per PartitionUtil)."""
-    n = grid.n_members
+    every member owns an equal partition, per PartitionUtil).
+
+    ``pad_multiple`` additionally pads entity array sizes to a multiple of
+    that value: the elastic cluster passes the LCM of every member count its
+    IAS can reach, so padded shapes — and hence the PRNG draws — are
+    IDENTICAL across scale events without requiring the LIVE entity counts
+    to be divisible by anything.  Padding rows are inert (0-MIPS VMs,
+    ``valid=False`` cloudlets) and never scheduled onto."""
+    n = math.lcm(grid.n_members, max(pad_multiple, 1))
     key = jax.random.PRNGKey(cfg.seed)
     k1, k2 = jax.random.split(key)
     V = pad_to_shards(cfg.n_vms, n)
@@ -252,11 +267,14 @@ class SimulationResult:
 def run_simulation(cfg: SimulationConfig, mesh: Mesh,
                    backup_count: int = 0, *, grid: Optional[DataGrid] = None,
                    executor: Optional[DistributedExecutor] = None,
-                   vm_owner=None) -> SimulationResult:
+                   vm_owner=None, pad_multiple: int = 1) -> SimulationResult:
     """One full simulation on ``mesh``.  ``grid``/``executor`` may be
     supplied by an elastic cluster that re-homes them across scale events
     (caller-owned grids are NOT cleared at the end); ``vm_owner`` is the
-    PartitionTable-backed VM→member map for ``core="scan_dist"``."""
+    PartitionTable-backed VM→member map for ``core="scan_dist"``;
+    ``pad_multiple`` additionally pads entity sizes (see
+    ``create_entities``) so elastic runs keep identical shapes across
+    member counts."""
     own_grid = grid is None
     grid = grid if grid is not None else DataGrid(mesh,
                                                  backup_count=backup_count)
@@ -264,7 +282,7 @@ def run_simulation(cfg: SimulationConfig, mesh: Mesh,
     timings = {}
 
     t0 = time.perf_counter()
-    ents = create_entities(cfg, grid)
+    ents = create_entities(cfg, grid, pad_multiple)
     jax.block_until_ready(grid.get("cloudlet_mi"))
     timings["create"] = time.perf_counter() - t0
 
@@ -287,7 +305,8 @@ def run_simulation(cfg: SimulationConfig, mesh: Mesh,
         finish, makespan = _simulate_completion_jit(*core_args)
     elif cfg.core == "scan_dist":
         finish, makespan = des_scan.simulate_completion_distributed(
-            *core_args, executor, vm_owner=vm_owner)
+            *core_args, executor, vm_owner=vm_owner, method=cfg.dist_method,
+            slack=cfg.exchange_slack, use_kernel=cfg.use_kernel)
     elif cfg.core == "scan":
         finish, makespan = des_scan.simulate_completion_scan_jit(
             *core_args, use_kernel=cfg.use_kernel)
@@ -316,19 +335,22 @@ class ElasticSimulationCluster:
     remesh callback (one atomic decision, process-0 style) rebalances the
     table to the new member count — re-homing only the moved virtual
     partitions — retires exactly the OLD mesh's compiled distributed cores
-    (``des_scan.invalidate_dist_core``), rebuilds the mesh over the device
-    pool, and re-homes any persistent ``DataGrid`` entries.  The next
-    ``simulate()`` call runs on the new member count; because ownership is a
-    runtime operand of the distributed core and per-member partials are
-    disjoint, finish vectors are BIT-identical before and after any scale
-    event.
+    (``des_scan.invalidate_dist_core``, which also retires that mesh's
+    owner-keyed exchange layouts: the next ``simulate()`` re-shards the
+    exchange at the new member count's shard/capacity geometry), rebuilds
+    the mesh over the device pool, and re-homes any persistent ``DataGrid``
+    entries.  Because ownership is a runtime operand of the distributed
+    core, the exchange re-homes each cloudlet to wherever its VM lives NOW,
+    and per-member partials are disjoint — finish vectors are BIT-identical
+    before and after any scale event.
     """
 
     def __init__(self, devices=None, axis: str = "data",
                  health_cfg: Optional["HealthConfig"] = None,
                  start_members: int = 1,
                  partition_count: Optional[int] = None):
-        from repro.core.elastic import ElasticController
+        from repro.core.elastic import (ElasticController,
+                                        reachable_member_counts)
         from repro.core.health import HealthConfig
         from repro.core.partition import (DEFAULT_PARTITION_COUNT,
                                           PartitionTable)
@@ -342,6 +364,10 @@ class ElasticSimulationCluster:
         hc = health_cfg or HealthConfig()
         hc = dataclasses.replace(
             hc, max_instances=min(hc.max_instances, len(self.devices)))
+        # entity sizes are padded to this multiple, so shapes (and PRNG
+        # draws) are identical at every member count the IAS can reach
+        self.entity_pad = functools.reduce(
+            math.lcm, reachable_member_counts(hc, n0))
         self.controller = ElasticController(hc, n0, remesh_fn=self._remesh)
         self.grid: Optional[DataGrid] = None
         self.scale_events = []
@@ -382,17 +408,24 @@ class ElasticSimulationCluster:
     # ----------------------------------------------------------- simulation
     def simulate(self, cfg: SimulationConfig) -> SimulationResult:
         """Run one simulation on the CURRENT member count with table-backed
-        VM ownership.  ``create_entities`` pads entity sizes to the current
-        member count, so the VM→member map is built at that same padded
-        length.  For finish vectors to stay bit-identical ACROSS scale
-        events, pick cfg sizes divisible by every member count the IAS may
-        reach (otherwise the padded shapes — and hence the PRNG draws —
-        differ between member counts)."""
+        VM ownership.  Entity sizes are auto-padded to the LCM of every
+        member count the IAS can reach (``self.entity_pad``), so padded
+        shapes — and hence PRNG draws and finish vectors — are BIT-identical
+        across scale events for ARBITRARY ``n_vms``/``n_cloudlets``; no
+        divisibility requirement.  Results are trimmed back to the
+        configured live entity counts."""
         if cfg.core != "scan_dist":
             cfg = dataclasses.replace(cfg, core="scan_dist")
         if self.grid is None:
             self.grid = DataGrid(self.mesh)
-        V = pad_to_shards(cfg.n_vms, self.n_members)
-        return run_simulation(cfg, self.mesh, grid=self.grid,
-                              executor=self.executor,
-                              vm_owner=self.vm_owner(V))
+        V = pad_to_shards(cfg.n_vms, math.lcm(self.n_members,
+                                              self.entity_pad))
+        r = run_simulation(cfg, self.mesh, grid=self.grid,
+                           executor=self.executor,
+                           vm_owner=self.vm_owner(V),
+                           pad_multiple=self.entity_pad)
+        C = cfg.n_cloudlets
+        return dataclasses.replace(
+            r, vm_assign=r.vm_assign[:C], finish_times=r.finish_times[:C],
+            workload_checksum=(None if r.workload_checksum is None
+                               else r.workload_checksum[:C]))

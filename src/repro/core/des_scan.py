@@ -23,14 +23,11 @@ Execution paths:
   * ``use_kernel=True``                 — the Pallas chunked segmented-scan
                                           kernel (``kernels/seg_scan``),
                                           interpret-mode fallback off-TPU
-  * ``simulate_completion_distributed`` — per-VM result segments owned by
-                                          mesh members via a *runtime*
-                                          ``PartitionTable``-backed VM→member
-                                          map (elastic: rebalancing the table
-                                          never recompiles; a scale event
-                                          only retires the old mesh's
-                                          executable via
-                                          ``invalidate_dist_core``)
+  * ``simulate_completion_distributed`` — COMPUTE-partitioned phase 4: an
+                                          owner-keyed exchange re-homes each
+                                          cloudlet to the member owning its
+                                          VM, and each member lexsorts+scans
+                                          only its own ~C/M cloudlets
   * ``run_simulation_batch``            — one jit over a multi-axis scenario
                                           GRID (seeds × mi_scale × broker ×
                                           VM-count × MIPS-distribution),
@@ -39,6 +36,37 @@ Execution paths:
                                           across mesh members (vmap of the
                                           scenario fn inside the partitioned
                                           member_fn).
+
+The exchange protocol (``method="exchange"``, the default distributed core):
+
+  1. Each member buckets its cloudlet shard (C/M contiguous rows) by
+     ``vm_owner[vm_assign]`` — the ``PartitionTable`` map, a RUNTIME operand,
+     so IAS rebalances re-home VMs without recompiling.
+  2. One padded all-to-all ships each cloudlet's ``(orig, assign, mi, valid)``
+     to the owner member.  Per-(src, dst) capacity is ``block`` entries
+     (static, part of the compile-cache key): heuristically
+     ``ceil(shard * slack / M)`` or, by default, the exact observed
+     ``exchange_load(...).max()`` rounded up to a power of two.  Unused
+     capacity is ``valid=False`` fill, which the scan maps to the sentinel
+     segment — padding contributes exactly 0.0.  Capacity violations are
+     counted on-device and raised as ``ExchangeCapacityError`` — loud, never
+     silent truncation.
+  3. The owner lexsorts + scans only its own cloudlets: per-member work drops
+     from O(C log C), replicated M times, to O((C/M) log(C/M)) each.
+  4. Finish partials are scattered back to global row positions and psum-med;
+     partials are disjoint (each cloudlet has exactly one owner) and
+     x + 0.0 == x, so the sum is exact.
+
+Bit-identity argument (the thesis's accuracy claim, preserved from PR 2):
+every per-element quantity in the scan depends only on the element's segment
+(its VM's cloudlet multiset) and its in-segment position p — the sort key
+(vm, mi), first differences, sharer counts (exact small-int f32 sums), and
+the segmented prefix sum, which ``_segmented_cumsum`` computes with a
+position-gated Hillis–Steele doubling scan whose addition tree is a function
+of p ALONE (never of the element's global offset or the array length).  A
+member's exchanged sub-array therefore reproduces the full array's finish
+values bit-for-bit, for any member count, ownership map, slack, or mid-run
+rebalance.
 """
 from __future__ import annotations
 
@@ -56,18 +84,31 @@ _EPS = 1e-6   # same "still running" threshold as the wave-loop reference
 
 
 def _segmented_cumsum(term, start):
-    """Segmented inclusive prefix sum via ``lax.associative_scan`` with the
-    classic segmented operator — sums never cross a ``start`` flag.  Unlike
-    global-cumsum-plus-rebase, rounding error stays proportional to the
-    per-SEGMENT magnitudes (rebase cancels against the global running total,
-    which at 100k cloudlets × hundreds of VMs costs ~1e-2 absolute)."""
-    def combine(a, b):
-        a_flag, a_sum = a
-        b_flag, b_sum = b
-        return a_flag | b_flag, b_sum + jnp.where(b_flag, 0.0, a_sum)
+    """Segmented inclusive prefix sum, position-gated Hillis–Steele.
 
-    _, sums = jax.lax.associative_scan(combine, (start, term))
-    return sums
+    log2(C) doubling steps; step ``d`` adds the value ``d`` slots back iff
+    that slot is in the same segment (in-segment position ``p >= d``).  The
+    value at p is therefore combined by a fixed tree determined by p ALONE:
+    x_d(p) = x_{d-1}(p) + [p >= d] * x_{d-1}(p - d).  Unlike
+    ``lax.associative_scan`` (whose combine tree follows GLOBAL offsets),
+    this makes the result layout-invariant — a segment scanned inside an
+    owner-keyed sub-array of any length reproduces the full array's values
+    BIT-exactly, which is what lets the distributed exchange core stay
+    bit-identical to the single-member scan.  Extra steps past a segment's
+    length are gated no-ops, so differing array lengths don't perturb it.
+    Rounding error stays proportional to per-SEGMENT magnitudes, as with the
+    segmented-operator scan this replaces."""
+    C = term.shape[0]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    seg_start = jax.lax.cummax(jnp.where(start, idx, 0))   # exact int scan
+    pos = idx - seg_start                                  # in-segment p
+    x = term
+    d = 1
+    while d < C:
+        shifted = jnp.concatenate([jnp.zeros((d,), x.dtype), x[:-d]])
+        x = x + jnp.where(pos >= d, shifted, jnp.zeros((), x.dtype))
+        d *= 2
+    return x
 
 
 # ------------------------------------------------------------- the scan core
@@ -145,13 +186,42 @@ def default_vm_owner(n_vms: int, n_members: int) -> jnp.ndarray:
     return jnp.asarray(table.owners_of_range(n_vms))
 
 
-# Compiled distributed cores, keyed on (mesh, axis, V).  A plain dict (not
-# lru_cache) so a scale event can retire exactly the executables built for
-# the mesh it replaces while every other member count's core stays warm;
-# FIFO-bounded so non-elastic sweeps over many (mesh, V) combinations don't
-# accumulate executables forever.
+class ExchangeCapacityError(RuntimeError):
+    """The owner-keyed all-to-all's per-(src, dst) ``block`` capacity was
+    exceeded: some cloudlets could not be shipped to their VM's owner and the
+    finish vector would be silently wrong.  Raise ``block``/``slack`` (the
+    exception message carries the observed requirement) or use the default
+    auto capacity, which sizes ``block`` from the exact ``exchange_load``."""
+
+
+# Compiled distributed cores, keyed on (mesh, axis, method, shapes, capacity).
+# A plain dict (not functools.lru_cache) so a scale event can retire exactly
+# the executables built for the mesh it replaces while every other member
+# count's core stays warm; LRU-bounded (hits move to the back, the FRONT is
+# evicted) so long grid sweeps over many (mesh, V, capacity) combinations
+# don't accumulate executables forever — and don't evict the hottest mesh.
 _DIST_CORE_CACHE: Dict[tuple, object] = {}
 _DIST_CORE_CACHE_MAX = 32
+
+# Auto-sized exchange capacities, keyed (mesh, axis, V, C_pad): steady-state
+# calls reuse the measured block instead of re-histogramming the ownership
+# map on the host every call; overflow triggers an exact-requirement retry
+# that updates the entry (see ``simulate_completion_distributed``).
+_AUTO_BLOCK_CACHE: Dict[tuple, int] = {}
+
+
+def _cache_get(key):
+    """LRU hit: move the entry to the back so eviction hits cold cores."""
+    fn = _DIST_CORE_CACHE.pop(key, None)
+    if fn is not None:
+        _DIST_CORE_CACHE[key] = fn
+    return fn
+
+
+def _cache_put(key, fn):
+    while len(_DIST_CORE_CACHE) >= _DIST_CORE_CACHE_MAX:
+        del _DIST_CORE_CACHE[next(iter(_DIST_CORE_CACHE))]   # LRU front
+    _DIST_CORE_CACHE[key] = fn
 
 
 def invalidate_dist_core(mesh=None, axis: Optional[str] = None) -> int:
@@ -164,15 +234,20 @@ def invalidate_dist_core(mesh=None, axis: Optional[str] = None) -> int:
             if (mesh is None or k[0] == mesh) and (axis is None or k[1] == axis)]
     for k in keys:
         del _DIST_CORE_CACHE[k]
+    for k in [k for k in _AUTO_BLOCK_CACHE
+              if (mesh is None or k[0] == mesh)
+              and (axis is None or k[1] == axis)]:
+        del _AUTO_BLOCK_CACHE[k]
     return len(keys)
 
 
-def _dist_core(mesh, axis, V):
-    """Compiled distributed phase-4 core for one (mesh, VM-count).  The
-    VM→member ownership map is a RUNTIME operand, so rebalancing the
-    partition table re-homes VMs without touching the executable."""
-    key = (mesh, axis, V)
-    cached = _DIST_CORE_CACHE.get(key)
+def _dist_core_replicated(mesh, axis, V, use_kernel, interpret):
+    """The PR-2 distributed core, kept as the benchmark baseline: every
+    member runs the IDENTICAL full O(C log C) scan and masks the finish
+    entries of the VMs it doesn't own — result-partitioned, not
+    compute-partitioned."""
+    key = (mesh, axis, "replicated", V, use_kernel, interpret)
+    cached = _cache_get(key)
     if cached is not None:
         return cached
 
@@ -182,13 +257,12 @@ def _dist_core(mesh, axis, V):
     members = jnp.arange(executor.n_members, dtype=jnp.int32)
 
     def member_fn(mid, owner, assign, mi, mips, val):
-        # Every member runs the IDENTICAL full scan (the O(C log C) sort is
-        # replicated anyway — see ROADMAP's distributed-sample-sort item) and
-        # keeps only the finish entries of the VMs it owns.  Masking the
-        # *output* rather than the validity keeps each element's value
-        # bit-identical to the single-member scan for ANY ownership map and
-        # member count: the partials are disjoint, and x + 0.0 == x exactly.
-        f, _ = simulate_completion_scan(assign, mi, mips, val)
+        # Masking the *output* rather than the validity keeps each element's
+        # value bit-identical to the single-member scan for ANY ownership map
+        # and member count: partials are disjoint, and x + 0.0 == x exactly.
+        f, _ = simulate_completion_scan(assign, mi, mips, val,
+                                        use_kernel=use_kernel,
+                                        interpret=interpret)
         mine = owner[assign] == mid[0]
         return jnp.where(mine, f, 0.0)[None, :]     # (1, C) partial
 
@@ -202,28 +276,179 @@ def _dist_core(mesh, axis, V):
         return finish, jnp.max(finish, initial=0.0)
 
     fn = jax.jit(call)
-    while len(_DIST_CORE_CACHE) >= _DIST_CORE_CACHE_MAX:
-        del _DIST_CORE_CACHE[next(iter(_DIST_CORE_CACHE))]
-    _DIST_CORE_CACHE[key] = fn
+    _cache_put(key, fn)
     return fn
 
 
+def _dist_core_exchange(mesh, axis, V, C_pad, block, use_kernel, interpret):
+    """Compute-partitioned distributed core: bucket by VM owner, all-to-all,
+    then each member lexsorts + scans ONLY its own cloudlets.  ``C_pad`` and
+    ``block`` (the per-(src, dst) exchange capacity) are static — part of
+    this cache key — while the VM→member ownership map stays a RUNTIME
+    operand, so rebalancing the partition table never recompiles."""
+    key = (mesh, axis, "exchange", V, C_pad, block, use_kernel, interpret)
+    cached = _cache_get(key)
+    if cached is not None:
+        return cached
+
+    from repro.core.executor import DistributedExecutor
+
+    executor = DistributedExecutor(mesh, axis)
+    M = executor.n_members
+    S = C_pad // M                       # local cloudlet shard
+    R = M * block                        # per-member receive capacity
+
+    def member_fn(local, owner, mips):
+        assign, mi, val = local                               # (S,) each
+        mid = executor.member_id()
+        orig = (mid * S + jnp.arange(S, dtype=jnp.int32))     # global rows
+        # --- 1. bucket the local shard by destination owner --------------
+        dest = jnp.where(val, owner[assign], M).astype(jnp.int32)
+        order = jnp.argsort(dest)                 # group rows by destination
+        dest_s = dest[order]
+        idx = jnp.arange(S, dtype=jnp.int32)
+        prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), dest_s[:-1]])
+        bucket_start = jax.lax.cummax(jnp.where(dest_s != prev, idx, 0))
+        rank = idx - bucket_start                 # position within bucket
+        live = dest_s < M                         # invalid rows don't ship
+        # overflowed rows land OUT of range and are dropped — but counted,
+        # so the caller can fail loudly instead of returning wrong results
+        slot = jnp.where(live & (rank < block), dest_s * block + rank, R)
+        overflow = jnp.sum(live & (rank >= block)).astype(jnp.int32)
+        need = jnp.max(jnp.where(live, rank, -1), initial=-1) + 1
+        # fill: assign 0, orig C_pad (dropped at scatter-back), valid False
+        fill = jnp.broadcast_to(jnp.array([0, C_pad, 0], jnp.int32), (R, 3))
+        ints = fill.at[slot].set(
+            jnp.stack([assign[order], orig[order],
+                       val[order].astype(jnp.int32)], axis=-1), mode="drop")
+        s_mi = jnp.zeros((R,), jnp.float32).at[slot].set(
+            mi[order].astype(jnp.float32), mode="drop")
+        # --- 2. one padded all-to-all re-homes the triples ---------------
+        r_ints = executor.all_to_all(ints.reshape(M, block, 3)).reshape(R, 3)
+        r_mi = executor.all_to_all(s_mi.reshape(M, block)).reshape(R)
+        r_assign = r_ints[:, 0]
+        r_orig, r_val = r_ints[:, 1], r_ints[:, 2] == 1
+        # --- 3. sort + scan ONLY the ~C/M cloudlets this member owns -----
+        f_loc, _ = simulate_completion_scan(r_assign, r_mi, mips, r_val,
+                                            use_kernel=use_kernel,
+                                            interpret=interpret)
+        # --- 4. scatter finishes back to global rows; disjoint partials --
+        part = jnp.zeros((C_pad,), jnp.float32).at[r_orig].set(
+            f_loc, mode="drop")
+        return (executor.psum(part), executor.psum(overflow),
+                executor.pmax(need))
+
+    def call(vm_owner, vm_assign, cloudlet_mi, vm_mips, valid):
+        finish, overflow, need = executor.execute_on_key_owners(
+            member_fn, (vm_assign, cloudlet_mi, valid),
+            replicated_args=(vm_owner, vm_mips),
+            out_specs=(P(), P(), P()))
+        return finish, jnp.max(finish, initial=0.0), overflow, need
+
+    fn = jax.jit(call)
+    _cache_put(key, fn)
+    return fn
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
 def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
-                                    executor, vm_owner=None):
+                                    executor, vm_owner=None, *,
+                                    method: str = "exchange",
+                                    block: Optional[int] = None,
+                                    slack: Optional[float] = None,
+                                    use_kernel: bool = False,
+                                    interpret: Optional[bool] = None):
     """Phase 4 distributed: per-VM completion segments are independent, so
     each member owns the finish entries of its VMs — ownership given by a
     ``PartitionTable``-backed VM→member map (``vm_owner``, a (V,) int32
-    runtime array; defaults to a freshly-balanced table).  The per-member
-    partials are disjoint and their sum is the full finish vector —
-    BIT-identical to ``simulate_completion_scan`` for any member count and
-    any ownership map (the thesis's accuracy claim), so an IAS scale event
-    mid-run cannot perturb results."""
+    runtime array; defaults to a freshly-balanced table).
+
+    ``method="exchange"`` (default) is COMPUTE-partitioned: an owner-keyed
+    all-to-all re-homes each cloudlet to its VM's owner and each member
+    sorts + scans only its own ~C/M cloudlets (see the module docstring for
+    the protocol and padding invariants).  ``method="replicated"`` keeps the
+    PR-2 baseline (every member scans the full problem, masks its output).
+
+    Exchange capacity: ``block`` fixes the per-(src, dst) all-to-all block;
+    ``slack`` sizes it heuristically (``exchange_block_size``).  Both fail
+    LOUDLY (``ExchangeCapacityError``) when violated — never a silently-
+    truncated result.  With neither, capacity is automatic and adaptive: the
+    exact requirement is measured once from the concrete ownership map
+    (``exchange_load``), rounded up to a power of two, and cached per
+    (mesh, axis, V, C) so steady-state calls skip the host-side histogram
+    entirely; if a later call's skew outgrows the cached block, the core's
+    on-device overflow counter reports the exact new requirement and the
+    call transparently retries once at that capacity (one recompile, still
+    never a wrong result).
+
+    The per-member partials are disjoint and their sum is the full finish
+    vector — BIT-identical to ``simulate_completion_scan`` for any member
+    count, ownership map, and capacity (the thesis's accuracy claim), so an
+    IAS scale event mid-run cannot perturb results."""
+    from repro.core.partition import (exchange_block_size, exchange_load,
+                                      pad_to_shards)
+
     V = vm_mips.shape[0]
+    M = executor.n_members
     if vm_owner is None:
-        vm_owner = default_vm_owner(V, executor.n_members)
-    fn = _dist_core(executor.mesh, executor.axis, V)
-    return fn(jnp.asarray(vm_owner, jnp.int32), vm_assign, cloudlet_mi,
-              vm_mips, valid)
+        vm_owner = default_vm_owner(V, M)
+    vm_owner = jnp.asarray(vm_owner, jnp.int32)
+    if interpret is None and use_kernel:
+        interpret = jax.default_backend() != "tpu"
+
+    if method == "replicated":
+        fn = _dist_core_replicated(executor.mesh, executor.axis, V,
+                                   use_kernel, interpret)
+        return fn(vm_owner, vm_assign, cloudlet_mi, vm_mips, valid)
+    if method != "exchange":
+        raise ValueError(f"unknown distributed method {method!r}")
+
+    C = int(cloudlet_mi.shape[0])
+    C_pad = pad_to_shards(max(C, 1), M)
+    shard = C_pad // M
+    auto = block is None and slack is None
+    if block is None:
+        if slack is not None:
+            block = exchange_block_size(C, M, slack)
+        else:       # auto: exact requirement, cached per core geometry
+            bkey = (executor.mesh, executor.axis, V, C_pad)
+            block = _AUTO_BLOCK_CACHE.get(bkey)
+            if block is None:
+                need = int(exchange_load(vm_owner, vm_assign, valid, M).max())
+                block = _pow2_ceil(max(need, 1))
+    block = max(1, min(int(block), shard))
+
+    vm_assign = jnp.asarray(vm_assign, jnp.int32)
+    cloudlet_mi = jnp.asarray(cloudlet_mi, jnp.float32)
+    valid = jnp.asarray(valid, bool)
+    if C_pad != C:      # pad to whole shards; fill never runs nor ships
+        pad = C_pad - C
+        vm_assign = jnp.concatenate([vm_assign, jnp.zeros((pad,), jnp.int32)])
+        cloudlet_mi = jnp.concatenate([cloudlet_mi, jnp.zeros((pad,))])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+
+    while True:
+        fn = _dist_core_exchange(executor.mesh, executor.axis, V, C_pad,
+                                 block, use_kernel, interpret)
+        finish, makespan, overflow, need = fn(vm_owner, vm_assign,
+                                              cloudlet_mi, vm_mips, valid)
+        if int(overflow) == 0:
+            break
+        if not auto:
+            raise ExchangeCapacityError(
+                f"{int(overflow)} cloudlet(s) exceeded the exchange block "
+                f"capacity {block} (observed per-(src,dst) requirement: "
+                f"{int(need)}); raise block/slack or use the default auto "
+                f"capacity")
+        # adaptive retry at the device-reported exact requirement; clamped
+        # to the shard size, so the second attempt cannot overflow
+        block = min(_pow2_ceil(int(need)), shard)
+    if auto:
+        _AUTO_BLOCK_CACHE[bkey] = block
+    return finish[:C], makespan
 
 
 # ------------------------------------------------- batched scenario sweeps

@@ -94,6 +94,23 @@ class IntelligentAdaptiveScaler:
         return Decision.NONE
 
 
+def reachable_member_counts(cfg: HealthConfig, start: int) -> frozenset:
+    """Closure of member counts the IAS can reach from ``start`` under its
+    doubling/halving dynamics (Algorithm 6: ``min(2n, max_instances)`` out,
+    ``max(n // 2, min_instances)`` in).  The elastic simulation cluster pads
+    entity sizes to the LCM of this set, so entity shapes — and hence PRNG
+    draws and finish vectors — are identical at every reachable count."""
+    seen, frontier = set(), {max(1, start)}
+    while frontier:
+        n = frontier.pop()
+        seen.add(n)
+        for nxt in (min(n * 2, cfg.max_instances),
+                    max(n // 2, cfg.min_instances)):
+            if nxt >= 1 and nxt not in seen:
+                frontier.add(nxt)
+    return frozenset(seen)
+
+
 class ElasticController:
     """Step-boundary elasticity: monitor → probe → IAS → re-mesh callback.
 

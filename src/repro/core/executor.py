@@ -76,6 +76,25 @@ class DistributedExecutor:
             out_specs=P(), check_vma=False)
         return f(data, *replicated_args)
 
+    # -- member-side collectives: only valid INSIDE an execute_on_key_owners
+    #    (or map_reduce) body, where the executor axis is bound by shard_map.
+
+    def member_id(self):
+        """This member's index on the executor axis (0..n_members-1)."""
+        return jax.lax.axis_index(self.axis)
+
+    def all_to_all(self, x, split_axis: int = 0, concat_axis: int = 0):
+        """Exchange: scatters ``split_axis`` (length n_members) across the
+        members and gathers the received blocks along ``concat_axis`` — the
+        owner-keyed cloudlet re-home of the distributed scan core."""
+        return jax.lax.all_to_all(x, self.axis, split_axis, concat_axis)
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axis)
+
+    def pmax(self, x):
+        return jax.lax.pmax(x, self.axis)
+
     def submit(self, task_fn: Callable, args_batch):
         """ExecutorService.submit of a task batch: tasks are round-robin
         partitioned over members and vmapped locally."""

@@ -121,3 +121,45 @@ class PartitionTable:
 def pad_to_shards(n: int, shards: int) -> int:
     """Global length padded so every shard holds an equal slice."""
     return ((n + shards - 1) // shards) * shards
+
+
+# ---------------------------------------------- owner-keyed exchange capacity
+#
+# The distributed scan core re-homes each cloudlet to the member owning its
+# VM with one padded all-to-all.  The exchange buffer is (n_shards, block)
+# per source member: member s sends at most ``block`` cloudlets to each
+# destination, so a destination receives at most ``n_shards * block``.  The
+# helpers below size ``block`` — either heuristically from a slack factor
+# over the balanced expectation, or exactly from the observed ownership map.
+
+DEFAULT_EXCHANGE_SLACK = 2.0
+
+
+def exchange_block_size(n_items: int, n_shards: int,
+                        slack: float = DEFAULT_EXCHANGE_SLACK) -> int:
+    """Per-(source, destination) block size for the owner-keyed all-to-all.
+
+    Balanced ownership sends ``shard / n_shards`` items per (src, dst) pair;
+    ``slack`` multiplies that expectation to absorb skew.  Clamped to the
+    shard size (a source cannot send more than its whole shard to one
+    destination, so ``slack >= n_shards`` always suffices)."""
+    shard = pad_to_shards(max(n_items, 1), n_shards) // n_shards
+    block = int(math.ceil(shard * slack / n_shards))
+    return max(1, min(block, shard))
+
+
+def exchange_load(vm_owner, vm_assign, valid, n_shards: int) -> np.ndarray:
+    """Owner histogram of the exchange: (n_shards, n_shards) counts of valid
+    cloudlets member ``src`` must send to member ``dst = vm_owner[assign]``.
+    ``load.max()`` is the exact per-(src, dst) block size the all-to-all
+    needs; ``load.sum(axis=0)`` is the per-member received (= scanned)
+    cloudlet count."""
+    owner = np.asarray(vm_owner)
+    assign = np.asarray(vm_assign)
+    valid = np.asarray(valid).astype(bool)
+    shard = pad_to_shards(max(assign.shape[0], 1), n_shards) // n_shards
+    src = np.arange(assign.shape[0]) // shard
+    dst = owner[assign]
+    load = np.zeros((n_shards, n_shards), np.int64)
+    np.add.at(load, (src[valid], dst[valid]), 1)
+    return load

@@ -1,0 +1,241 @@
+"""Owner-keyed exchange core (compute-partitioned phase 4).
+
+The bucket-sort distributed core re-homes each cloudlet to the member that
+owns its VM with one padded all-to-all, and each member lexsorts + scans
+only its own ~C/M cloudlets.  These tests pin the contract:
+
+  * finish vectors BIT-identical to ``simulate_completion_scan`` across
+    member counts {1, 2, 4, 8}, maximally-skewed ownership maps, explicit
+    slack capacities, and a scale-out 1→2→4 / scale-in 4→2 sequence mid-run
+    with entity sizes divisible by nothing;
+  * capacity violations raise ``ExchangeCapacityError`` — loud, never a
+    silently-truncated finish vector;
+  * the compiled-core cache is LRU (hits move to the back), so long sweeps
+    can't evict the hottest mesh.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import des_scan
+from repro.core.des_scan import (ExchangeCapacityError, _pow2_ceil,
+                                 simulate_completion_distributed,
+                                 simulate_completion_scan)
+from repro.core.executor import DistributedExecutor
+from repro.core.partition import (exchange_block_size, exchange_load,
+                                  pad_to_shards)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def _case(rng, C=180, V=32):
+    """Degenerate-heavy random case: invalid rows, dead VMs, zero lengths,
+    duplicate lengths (sort-tie coverage)."""
+    assign = rng.integers(0, V, C).astype(np.int32)
+    mi = rng.uniform(1.0, 200.0, C).astype(np.float32)
+    mi[rng.uniform(size=C) < 0.15] = 50.0          # ties within segments
+    mi[rng.uniform(size=C) < 0.1] = 0.0
+    mips = rng.uniform(5.0, 20.0, V).astype(np.float32)
+    mips[rng.uniform(size=V) < 0.2] = 0.0
+    valid = rng.uniform(size=C) < 0.85
+    return (jnp.asarray(assign), jnp.asarray(mi), jnp.asarray(mips),
+            jnp.asarray(valid))
+
+
+def test_exchange_bitwise_vs_scan_single_member():
+    """M=1 exchange (bucket + identity all-to-all + local scan) is already a
+    full layout round-trip — it must be bit-identical, not just close."""
+    rng = np.random.default_rng(11)
+    ex = DistributedExecutor(mesh1())
+    scan = jax.jit(simulate_completion_scan)
+    for _ in range(8):
+        args = _case(rng)
+        f_ref, m_ref = scan(*args)
+        f, m = simulate_completion_distributed(*args, ex)
+        assert np.array_equal(np.asarray(f), np.asarray(f_ref))
+        assert float(m) == float(m_ref)
+
+
+def test_capacity_overflow_fails_loudly():
+    rng = np.random.default_rng(3)
+    args = _case(rng, C=64, V=8)
+    ex = DistributedExecutor(mesh1())
+    with pytest.raises(ExchangeCapacityError, match="block capacity 1"):
+        simulate_completion_distributed(*args, ex, block=1)
+    # ... and the auto capacity on the same inputs succeeds bit-exactly
+    f_ref, _ = jax.jit(simulate_completion_scan)(*args)
+    f, _ = simulate_completion_distributed(*args, ex)
+    assert np.array_equal(np.asarray(f), np.asarray(f_ref))
+
+
+def test_exchange_capacity_helpers():
+    # balanced expectation × slack, clamped to the shard size
+    assert exchange_block_size(80, 4, slack=2.0) == 10     # 20 * 2 / 4
+    assert exchange_block_size(80, 4, slack=100.0) == 20   # ≤ shard
+    assert exchange_block_size(1, 4, slack=0.1) == 1       # ≥ 1
+    assert _pow2_ceil(1) == 1 and _pow2_ceil(3) == 4 and _pow2_ceil(8) == 8
+    # exact owner histogram: 2 shards of 4, all VMs owned by member 1
+    owner = np.array([1, 1], np.int32)
+    assign = np.array([0, 1, 0, 1, 0, 0, 1, 1], np.int32)
+    valid = np.array([1, 1, 1, 0, 1, 1, 1, 1], bool)
+    load = exchange_load(owner, assign, valid, 2)
+    assert load.shape == (2, 2)
+    assert load[0].tolist() == [0, 3] and load[1].tolist() == [0, 4]
+    # load.max() is exactly the block the exchange needs — on the 1-member
+    # executor the requirement is the whole valid count (7) ...
+    load1 = exchange_load(np.zeros(2, np.int32), assign, valid, 1)
+    assert load1.tolist() == [[7]]
+    args = (jnp.asarray(assign), jnp.ones(8) * 5.0, jnp.ones(2) * 10.0,
+            jnp.asarray(valid))
+    ex = DistributedExecutor(mesh1())
+    f_ref, _ = jax.jit(simulate_completion_scan)(*args)
+    f, _ = simulate_completion_distributed(
+        *args, ex, vm_owner=np.zeros(2, np.int32), block=int(load1.max()))
+    assert np.array_equal(np.asarray(f), np.asarray(f_ref))
+    # ... and one less overflows loudly
+    with pytest.raises(ExchangeCapacityError):
+        simulate_completion_distributed(
+            *args, ex, vm_owner=np.zeros(2, np.int32), block=6)
+
+
+def test_dist_core_cache_is_lru(monkeypatch):
+    """Regression: FIFO eviction used to evict the HOTTEST mesh during long
+    grid sweeps; a hit must move the entry to the back."""
+    monkeypatch.setattr(des_scan, "_DIST_CORE_CACHE_MAX", 2)
+    des_scan.invalidate_dist_core()
+    ex = DistributedExecutor(mesh1())
+    rng = np.random.default_rng(0)
+
+    def run(V):
+        assign, mi, mips, valid = _case(rng, C=16, V=V)
+        simulate_completion_distributed(assign, mi, mips, valid, ex, block=16)
+
+    run(4)                                     # A
+    key_a = next(iter(des_scan._DIST_CORE_CACHE))
+    fn_a = des_scan._DIST_CORE_CACHE[key_a]
+    run(8)                                     # B — cache is now full
+    run(4)                                     # HIT A: moves A to the back
+    run(16)                                    # C — evicts B (LRU), not A
+    cache = des_scan._DIST_CORE_CACHE
+    assert len(cache) == 2
+    assert key_a in cache and cache[key_a] is fn_a
+    assert {k[3] for k in cache} == {4, 16}    # V=8 (B) was evicted
+    des_scan.invalidate_dist_core()
+
+
+def test_reachable_member_counts():
+    from repro.core.elastic import reachable_member_counts
+    from repro.core.health import HealthConfig
+
+    hc = HealthConfig(min_instances=1, max_instances=8)
+    assert reachable_member_counts(hc, 1) == frozenset({1, 2, 4, 8})
+    assert reachable_member_counts(hc, 3) == frozenset({1, 2, 3, 4, 6, 8})
+    hc = HealthConfig(min_instances=2, max_instances=6)
+    assert reachable_member_counts(hc, 2) == frozenset({2, 3, 4, 6})
+
+
+def test_exchange_bit_identical_members_skew_and_slack():
+    """Property sweep on 8 emulated members: random degenerate cases ×
+    member counts {1,2,4,8} × ownership maps (balanced / all-on-first /
+    all-on-last / random) × capacity modes (auto / generous slack) are ALL
+    bit-identical to the single-member scan; an undersized slack on a
+    maximally-skewed map fails loudly."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.des_scan import (ExchangeCapacityError,
+                                 simulate_completion_distributed,
+                                 simulate_completion_scan)
+from repro.core.executor import DistributedExecutor
+
+devs = jax.devices()
+rng = np.random.default_rng(0)
+scan = jax.jit(simulate_completion_scan)
+C, V = 210, 48                                  # divisible by neither 4 nor 8
+for case in range(3):
+    assign = jnp.asarray(rng.integers(0, V, C).astype(np.int32))
+    mi = np.asarray(rng.uniform(1.0, 200.0, C).astype(np.float32))
+    mi[rng.uniform(size=C) < 0.15] = 50.0       # sort ties
+    mi = jnp.asarray(mi)
+    mips = np.asarray(rng.uniform(5.0, 20.0, V).astype(np.float32))
+    mips[rng.uniform(size=V) < 0.2] = 0.0
+    mips = jnp.asarray(mips)
+    valid = jnp.asarray(rng.uniform(size=C) < 0.85)
+    f_ref, m_ref = scan(assign, mi, mips, valid)
+    f_ref, m_ref = np.asarray(f_ref), float(m_ref)
+    for M in (1, 2, 4, 8):
+        ex = DistributedExecutor(Mesh(np.array(devs[:M]), ("data",)))
+        owners = [None, np.zeros(V, np.int32), np.full(V, M - 1, np.int32),
+                  rng.integers(0, M, V).astype(np.int32)]
+        for oi, owner in enumerate(owners):
+            for kw in ({}, {"slack": float(M)}):
+                f, m = simulate_completion_distributed(
+                    assign, mi, mips, valid, ex, vm_owner=owner, **kw)
+                assert np.array_equal(np.asarray(f), f_ref), (case, M, oi, kw)
+                assert float(m) == m_ref, (case, M, oi, kw)
+# undersized slack on a maximally-skewed map: loud, not silent
+ex = DistributedExecutor(Mesh(np.array(devs[:8]), ("data",)))
+try:
+    simulate_completion_distributed(assign, mi, mips, valid, ex,
+                                    vm_owner=np.zeros(V, np.int32), slack=1.0)
+    raise SystemExit("expected ExchangeCapacityError")
+except ExchangeCapacityError:
+    pass
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_elastic_autopad_nondivisible_entities():
+    """Auto-padding satellite: the cluster pads entity sizes to the LCM of
+    reachable member counts, so a cfg divisible by NOTHING stays bit-stable
+    across scale-out 1→2→4 and scale-in 4→2 — and matches a fixed 1-member
+    scan run at the same padded shapes."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import dataclasses
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.core.cloudsim import (ElasticSimulationCluster, SimulationConfig,
+                                 run_simulation)
+from repro.core.health import HealthConfig
+
+devs = jax.devices()
+cfg = SimulationConfig(n_vms=41, n_cloudlets=83, broker="matchmaking",
+                       core="scan_dist")                  # prime-ish sizes
+hc = HealthConfig(target_step_time=1.0, max_threshold=0.8, min_threshold=0.2,
+                  time_between_scaling=1, window=1, max_instances=4)
+cl = ElasticSimulationCluster(devices=devs, health_cfg=hc, start_members=1)
+assert cl.entity_pad == 4, cl.entity_pad
+
+# fixed-mesh oracle at the SAME padded shapes the cluster uses
+fixed = run_simulation(dataclasses.replace(cfg, core="scan"),
+                       Mesh(np.array(devs[:1]), ("data",)),
+                       pad_multiple=cl.entity_pad)
+ref = fixed.finish_times[:cfg.n_cloudlets]
+
+results = [cl.simulate(cfg)]
+for load, expect in [(2.0, 2), (2.0, 4), (0.05, 2)]:
+    cl.observe_load(load)
+    assert cl.n_members == expect, (cl.n_members, expect)
+    results.append(cl.simulate(cfg))
+for i, r in enumerate(results):
+    assert r.finish_times.shape == (cfg.n_cloudlets,), r.finish_times.shape
+    assert np.array_equal(r.finish_times, ref), i
+    assert r.makespan == fixed.makespan, i
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert "OK" in r.stdout, r.stdout + r.stderr
