@@ -2,10 +2,13 @@
 
 The grid stacks seeds × mi_scale × broker × VM-count × MIPS-distribution
 variants (heterogeneous shapes padded: 0-MIPS VMs, valid=False cloudlets)
-into ONE jitted vmap, and optionally shards the batch across mesh members.
-Writes ``BENCH_batch.json``: per-B wall time, scenarios/s, and the
-single-member vs mesh-sharded split — the CloudSim-scale scenario
-throughput a sequential simulator can't reach (arXiv:0903.2525).
+into ONE jitted vmap, and optionally shards the batch across mesh members —
+or STREAMS it through the ``ElasticDispatcher`` middleware in fixed-shape
+chunks (grids larger than device memory; one compile per geometry, verified
+by the cache counters in the payload).  Writes ``BENCH_batch.json``: per-B
+wall time, scenarios/s, and the single-member vs mesh-sharded vs streamed
+split — the CloudSim-scale scenario throughput a sequential simulator can't
+reach (arXiv:0903.2525).
 """
 import json
 import os
@@ -22,7 +25,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from benchmarks.common import emit
+from benchmarks.common import emit, smoke
 from repro.core.cloudsim import SimulationConfig
 from repro.core.des_scan import make_scenario_grid, run_scenario_grid
 from repro.core.executor import DistributedExecutor
@@ -33,36 +36,70 @@ N_CLOUDLETS = 2_000
 N_VMS = 128
 
 
-def bench_grid(B: int, executor=None):
-    """B mixed-axis variants (2 brokers × 2 VM-counts × 3 MIPS-dists ×
-    2 scales × seeds-to-fill, truncated to exactly B) through one jit."""
-    cfg = SimulationConfig(n_vms=N_VMS, n_cloudlets=N_CLOUDLETS)
+def _make(B: int, n_vms: int, n_cloudlets: int):
+    cfg = SimulationConfig(n_vms=n_vms, n_cloudlets=n_cloudlets)
     grid = make_scenario_grid(
         seeds=range(max(1, -(-B // 24))), mi_scales=[0.75, 1.5],
         brokers=["round_robin", "matchmaking"],
-        vm_counts=[N_VMS // 2, N_VMS],
+        vm_counts=[n_vms // 2, n_vms],
         mips_dists=["uniform", "fixed", "bimodal"])
     grid = {k: np.asarray(v)[:B] for k, v in grid.items()}
     assert len(grid["seeds"]) == B
+    return cfg, grid
+
+
+def bench_grid(B: int, executor=None, n_vms=N_VMS, n_cloudlets=N_CLOUDLETS):
+    """B mixed-axis variants (2 brokers × 2 VM-counts × 3 MIPS-dists ×
+    2 scales × seeds-to-fill, truncated to exactly B) through one jit."""
+    cfg, grid = _make(B, n_vms, n_cloudlets)
     run_scenario_grid(cfg, grid, executor=executor)     # compile the shape
     r = run_scenario_grid(cfg, grid, executor=executor)
     wall = r.timings["batch_total"]
     mode = f"mesh{executor.n_members}" if executor is not None else "1member"
     emit(f"grid/B{B}/{mode}", wall * 1e6, f"{B / wall:.0f} scenarios/s")
-    return {"n_scenarios": B, "n_cloudlets": N_CLOUDLETS, "n_vms": N_VMS,
+    return {"n_scenarios": B, "n_cloudlets": n_cloudlets, "n_vms": n_vms,
             "mode": mode, "wall_s": wall, "scenarios_per_s": B / wall,
             "mean_makespan": float(r.makespans.mean()),
             "axes": {"brokers": 2, "vm_counts": 2, "mips_dists": 3,
                      "mi_scales": 2}}
 
 
+def bench_grid_streamed(B: int, chunk: int, n_vms=N_VMS,
+                        n_cloudlets=N_CLOUDLETS):
+    """The same grid streamed chunk-by-chunk through the dispatcher: only
+    ``chunk`` variants are resident per dispatch (larger-than-memory grids)
+    and the compile cache holds ONE executable for the whole stream."""
+    from repro.core.dispatch import ElasticDispatcher
+
+    cfg, grid = _make(B, n_vms, n_cloudlets)
+    d = ElasticDispatcher(devices=jax.devices()[:1])
+    run_scenario_grid(cfg, grid, dispatcher=d, chunk=chunk)   # compile
+    r = run_scenario_grid(cfg, grid, dispatcher=d, chunk=chunk)
+    wall = r.timings["batch_total"]
+    rep = r.dispatch
+    emit(f"grid/B{B}/stream{chunk}", wall * 1e6,
+         f"{B / wall:.0f} scenarios/s;chunks={rep['n_chunks']};"
+         f"compiles={rep['compiles']}")
+    return {"n_scenarios": B, "n_cloudlets": n_cloudlets, "n_vms": n_vms,
+            "mode": f"stream{chunk}", "wall_s": wall,
+            "scenarios_per_s": B / wall, "n_chunks": rep["n_chunks"],
+            "compiles": rep["compiles"], "cache_hits": rep["cache_hits"]}
+
+
 def main():
-    entries = [bench_grid(B) for B in BATCH_SIZES]
+    if smoke():
+        sizes, n_vms, n_cl = (8,), 16, 200
+    else:
+        sizes, n_vms, n_cl = BATCH_SIZES, N_VMS, N_CLOUDLETS
+    entries = [bench_grid(B, n_vms=n_vms, n_cloudlets=n_cl) for B in sizes]
     n_dev = len(jax.devices())
     if n_dev > 1:
         ex = DistributedExecutor(Mesh(np.array(jax.devices()), ("data",)))
-        entries += [bench_grid(B, executor=ex) for B in BATCH_SIZES]
-    return {"batch_sizes": list(BATCH_SIZES), "n_devices": n_dev,
+        entries += [bench_grid(B, executor=ex, n_vms=n_vms, n_cloudlets=n_cl)
+                    for B in sizes]
+    entries += [bench_grid_streamed(max(sizes), max(max(sizes) // 4, 1),
+                                    n_vms=n_vms, n_cloudlets=n_cl)]
+    return {"batch_sizes": list(sizes), "n_devices": n_dev,
             "entries": entries}
 
 

@@ -1,11 +1,19 @@
 """Shared benchmark plumbing. Benchmarks run on 8 emulated host devices (set
 before jax import by benchmarks/run.py) — the thesis's 6-node i7 cluster
-analogue."""
+analogue; ``run.py --smoke`` flips every module to toy sizes on 2 devices."""
+import os
 import time
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
+
+
+def smoke() -> bool:
+    """True when running under ``benchmarks/run.py --smoke``: every module
+    shrinks to toy sizes so the whole suite exercises its code paths in
+    seconds (a tier-1 test invokes it — benchmark scripts can't bit-rot)."""
+    return os.environ.get("BENCH_SMOKE") == "1"
 
 
 def mesh_of(n: int) -> Mesh:

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, smoke
 from repro.core.cloudsim import SimulationConfig, simulate_completion
 from repro.core.des_scan import run_simulation_batch, simulate_completion_scan
 
@@ -94,6 +94,11 @@ def bench_batch(n_scenarios=32, n_cloudlets=2_000, n_vms=128):
 
 
 def main():
+    if smoke():
+        return {"n_vms": 32,
+                "entries": bench_core(sizes=(500, 2_000), n_vms=32),
+                "batch": bench_batch(n_scenarios=8, n_cloudlets=200,
+                                     n_vms=32)}
     payload = {"n_vms": N_VMS, "entries": bench_core(),
                "batch": bench_batch()}
     return payload

@@ -4,7 +4,7 @@ import dataclasses
 
 import jax
 
-from benchmarks.common import emit, mesh_of
+from benchmarks.common import emit, mesh_of, smoke
 from repro.core.cloudsim import SimulationConfig, run_simulation
 from repro.core.speedup import SpeedupModel
 
@@ -12,7 +12,9 @@ from repro.core.speedup import SpeedupModel
 def main():
     n_devs = len(jax.devices())
     ns = [n for n in (1, 2, 4, 8) if n <= n_devs]
-    for n_cl, iters in [(150, 0.3), (200, 1.0), (400, 2.0)]:
+    cases = ([(60, 0.05)] if smoke()
+             else [(150, 0.3), (200, 1.0), (400, 2.0)])
+    for n_cl, iters in cases:
         # phase 4 now runs the closed-form scan core; on >1 member it is
         # partitioned over members too ("scan_dist"), so EVERY phase scales
         cfg = SimulationConfig(n_vms=200, n_cloudlets=n_cl,

@@ -2,17 +2,18 @@
 vs members (Eqs 3.7/3.8/3.10)."""
 import jax
 
-from benchmarks.common import emit, mesh_of
+from benchmarks.common import emit, mesh_of, smoke
 from repro.core.cloudsim import SimulationConfig, run_simulation
 
 
 def main():
     n_devs = len(jax.devices())
     ns = [n for n in (1, 2, 4, 8) if n <= n_devs]
-    for n_cl in (200, 400, 800):
+    sizes, iters = ((60,), 0.05) if smoke() else ((200, 400, 800), 1.0)
+    for n_cl in sizes:
         cfg = SimulationConfig(n_vms=200, n_cloudlets=n_cl,
                                broker="matchmaking", is_loaded=True,
-                               workload_iters_per_gmi=1.0)
+                               workload_iters_per_gmi=iters)
         t1 = None
         for n in ns:
             r = run_simulation(cfg, mesh_of(n))

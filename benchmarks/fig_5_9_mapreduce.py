@@ -2,29 +2,36 @@
 backends, scaling size (reduce invocations) and member count (map
 invocations = files)."""
 import jax
-import jax.numpy as jnp
 
-from benchmarks.common import emit, mesh_of
+from benchmarks.common import emit, mesh_of, smoke
 from repro.core.mapreduce import MapReduceEngine, make_corpus, word_count_job
 
 
 def main():
     n_devs = len(jax.devices())
     ns = [n for n in (1, 2, 4, 8) if n <= n_devs]
+    if smoke():
+        sweep, scale_job = [(256, 512)], (256, 1024)
+    else:
+        sweep = [(1024, 4096), (4096, 16384), (16384, 65536)]
+        scale_job = (8192, 32768)
     # Fig 5.9: size sweep on 1 member, both backends
-    for vocab, file_len in [(1024, 4096), (4096, 16384), (16384, 65536)]:
-        corpus = jnp.asarray(make_corpus(8, file_len, vocab))
+    for vocab, file_len in sweep:
+        corpus = make_corpus(8, file_len, vocab)   # host array:
+        # the dispatcher slices chunks host-side, so a device
+        # corpus would only add a D2H round-trip per run
         for backend in ("hazelcast", "infinispan"):
             eng = MapReduceEngine(mesh_of(1), backend=backend)
             _, secs = eng.benchmark(word_count_job(vocab), corpus, repeats=3)
             emit(f"f5.9/{backend}/reduce{vocab}", secs * 1e6,
                  f"map_inv=8;reduce_inv={vocab}")
     # Figs 5.10/5.11: member scaling, fixed job
-    corpus = jnp.asarray(make_corpus(8, 32768, 8192))
+    vocab, file_len = scale_job
+    corpus = make_corpus(8, file_len, vocab)
     for backend in ("hazelcast", "infinispan"):
         for n in ns:
             eng = MapReduceEngine(mesh_of(n), backend=backend)
-            _, secs = eng.benchmark(word_count_job(8192), corpus, repeats=3)
+            _, secs = eng.benchmark(word_count_job(vocab), corpus, repeats=3)
             emit(f"f5.10/{backend}/n{n}", secs * 1e6, "map_inv=8")
 
 

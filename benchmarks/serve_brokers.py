@@ -4,13 +4,14 @@ import numpy as np
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, smoke
 from repro.configs import get_config, reduced
 from repro.models.model import build_model
 from repro.serve.scheduler import Request, ServeEngine
 
 
 def main():
+    n_reqs, max_steps = (4, 48) if smoke() else (10, 128)
     cfg = reduced(get_config("smollm-360m"), n_layers=2, d_model=32,
                   n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
                   vocab_size=128)
@@ -18,12 +19,12 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     reqs = [(rng.integers(0, 128, size=int(rng.integers(2, 10))).astype(
-        np.int32), int(rng.integers(2, 6))) for _ in range(10)]
+        np.int32), int(rng.integers(2, 6))) for _ in range(n_reqs)]
     for policy in ("round_robin", "matchmaking"):
         eng = ServeEngine(model, params, n_slots=4, max_len=48, policy=policy)
         for i, (p, m) in enumerate(reqs):
             eng.sched.submit(Request(i, p, max_new_tokens=m))
-        out = eng.run(max_steps=128)
+        out = eng.run(max_steps=max_steps)
         emit(f"serve/{policy}", float(out["steps"]),
              f"completed={len(out['completed'])};dropped={out['dropped']}")
 

@@ -2,17 +2,18 @@
 1/2/4/8 members.  ("CloudSim" = the single-member sequential run.)"""
 import jax
 
-from benchmarks.common import emit, mesh_of
+from benchmarks.common import emit, mesh_of, smoke
 from repro.core.cloudsim import SimulationConfig, run_simulation
 
 
 def main():
     n_devs = len(jax.devices())
+    n_vms, n_cl, iters = (40, 80, 0.05) if smoke() else (200, 400, 1.0)
     rows = {}
     for loaded in (False, True):
-        cfg = SimulationConfig(n_vms=200, n_cloudlets=400,
+        cfg = SimulationConfig(n_vms=n_vms, n_cloudlets=n_cl,
                                broker="round_robin", is_loaded=loaded,
-                               workload_iters_per_gmi=1.0)
+                               workload_iters_per_gmi=iters)
         for n in [1, 2, 4, 8]:
             if n > n_devs:
                 continue

@@ -2,7 +2,7 @@
 health/scale-event log during a real training run."""
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, smoke
 from repro.configs import get_config, reduced
 from repro.core.health import HealthConfig
 from repro.data.pipeline import DataConfig
@@ -16,7 +16,8 @@ def main():
                   vocab_size=256)
     model = build_model(cfg, remat=False, xent_chunk=16)
     rep = run_elastic_training(
-        model, steps=24, data_cfg=DataConfig(256, 32, 8), start_instances=1,
+        model, steps=8 if smoke() else 24,
+        data_cfg=DataConfig(256, 32, 8), start_instances=1,
         health_cfg=HealthConfig(target_step_time=1e-4, min_threshold=-1.0,
                                 time_between_scaling=6, window=3))
     emit("t5.2/scale_events", 0.0,

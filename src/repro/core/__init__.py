@@ -4,7 +4,11 @@
   partition    PartitionUtil + 271-virtual-shard consistent partition table
   grid         DataGrid — the in-memory data grid over a device mesh
   executor     DistributedExecutor — logic-to-data shard_map execution
-  mapreduce    dual-backend (hazelcast/infinispan) MapReduce engine
+  dispatch     ElasticDispatcher — the unified remesh-aware, chunk-streaming
+               job middleware (grids, MapReduce, and the elastic cluster all
+               run on it) + the CompileCache executable cache
+  mapreduce    dual-backend (hazelcast/infinispan) MapReduce engine, run as
+               dispatcher jobs (chunk streaming + adaptive scaling)
   health       HealthMonitor (Algorithm 4 signals)
   elastic      AdaptiveScalerProbe / IntelligentAdaptiveScaler (Algs 5-6)
   coordinator  multi-tenant Coordinator

@@ -33,7 +33,6 @@ of members (tests assert the thesis's accuracy claim).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 import time
 from typing import Dict, Optional
@@ -177,11 +176,17 @@ def _one_workload(mi, dim: int, iters: int):
     return jnp.sum(out)
 
 
+def workload_iters(cfg: SimulationConfig) -> int:
+    """The ``isLoaded`` payload's iteration count — ONE definition shared by
+    the per-simulation path (``run_workloads``) and the scenario grid's
+    ``is_loaded`` axis, so both report the same checksum for a config."""
+    return int(cfg.workload_iters_per_gmi * (cfg.cloudlet_mi_range[1] / 1000.0))
+
+
 def run_workloads(cfg: SimulationConfig, grid: DataGrid,
                   executor: DistributedExecutor) -> jax.Array:
     mi = grid.get("cloudlet_mi")
-    iters = int(cfg.workload_iters_per_gmi *
-                (cfg.cloudlet_mi_range[1] / 1000.0))
+    iters = workload_iters(cfg)
 
     def member(local_mi):
         return jax.vmap(lambda m: _one_workload(m, cfg.workload_dim, iters))(
@@ -327,83 +332,95 @@ def run_simulation(cfg: SimulationConfig, mesh: Mesh,
 # ------------------------------------------------- elastic simulation cluster
 
 class ElasticSimulationCluster:
-    """Elastic mesh for ``core="scan_dist"``: the IntelligentAdaptiveScaler
-    grows/shrinks the member set MID-RUN and the simulation keeps going.
+    """Elastic mesh for ``core="scan_dist"`` — a THIN CLIENT of the
+    ``ElasticDispatcher`` middleware (``core/dispatch.py``).
 
-    Wiring (PAPER §4.1.3 / §4.3 on a device mesh): VM ownership lives in a
-    271-virtual-partition ``PartitionTable``; the ``ElasticController``'s
-    remesh callback (one atomic decision, process-0 style) rebalances the
-    table to the new member count — re-homing only the moved virtual
-    partitions — retires exactly the OLD mesh's compiled distributed cores
-    (``des_scan.invalidate_dist_core``, which also retires that mesh's
-    owner-keyed exchange layouts: the next ``simulate()`` re-shards the
-    exchange at the new member count's shard/capacity geometry), rebuilds
-    the mesh over the device pool, and re-homes any persistent ``DataGrid``
-    entries.  Because ownership is a runtime operand of the distributed
-    core, the exchange re-homes each cloudlet to wherever its VM lives NOW,
-    and per-member partials are disjoint — finish vectors are BIT-identical
-    before and after any scale event.
+    All the moving parts live in the dispatcher now: the 271-virtual-
+    partition ``PartitionTable``, the ``ElasticController``→IAS wiring, the
+    remesh callback (rebalance table → retire exactly the outgoing
+    geometry's executables → rebuild mesh → re-home the ``DataGrid``), and
+    the compile cache.  This class only binds a simulation config to the
+    dispatcher's current geometry: it pads entities to the dispatcher's
+    ``entity_pad`` (the LCM of every member count the IAS can reach) and
+    ships the table-backed VM→member map as the distributed core's runtime
+    operand, so finish vectors are BIT-identical before and after any scale
+    event (PAPER §4.1.3 / §4.3).
     """
 
     def __init__(self, devices=None, axis: str = "data",
                  health_cfg: Optional["HealthConfig"] = None,
                  start_members: int = 1,
-                 partition_count: Optional[int] = None):
-        from repro.core.elastic import (ElasticController,
-                                        reachable_member_counts)
-        from repro.core.health import HealthConfig
-        from repro.core.partition import (DEFAULT_PARTITION_COUNT,
-                                          PartitionTable)
+                 partition_count: Optional[int] = None,
+                 dispatcher=None):
+        from repro.core.dispatch import ElasticDispatcher
 
-        self.devices = list(devices if devices is not None else jax.devices())
-        self.axis = axis
-        n0 = max(1, min(start_members, len(self.devices)))
-        self.table = PartitionTable(
-            partition_count=partition_count or DEFAULT_PARTITION_COUNT,
-            n_instances=n0)
-        hc = health_cfg or HealthConfig()
-        hc = dataclasses.replace(
-            hc, max_instances=min(hc.max_instances, len(self.devices)))
-        # entity sizes are padded to this multiple, so shapes (and PRNG
-        # draws) are identical at every member count the IAS can reach
-        self.entity_pad = functools.reduce(
-            math.lcm, reachable_member_counts(hc, n0))
-        self.controller = ElasticController(hc, n0, remesh_fn=self._remesh)
-        self.grid: Optional[DataGrid] = None
-        self.scale_events = []
-        self._build(n0)
+        if dispatcher is not None:
+            # the dispatcher IS the topology: silently dropping conflicting
+            # kwargs would run a differently-configured cluster
+            if (devices is not None or axis != "data"
+                    or health_cfg is not None or start_members != 1
+                    or partition_count is not None):
+                raise ValueError(
+                    "pass either a dispatcher OR topology kwargs (devices/"
+                    "axis/health_cfg/start_members/partition_count), not "
+                    "both — the dispatcher already owns the topology")
+            self.dispatcher = dispatcher
+        else:
+            self.dispatcher = ElasticDispatcher(
+                devices=devices, axis=axis, health_cfg=health_cfg,
+                start_members=start_members, partition_count=partition_count)
 
-    # ------------------------------------------------------------- topology
-    def _build(self, n: int) -> None:
-        self.executor = DistributedExecutor.for_devices(self.devices[:n],
-                                                        self.axis)
-        self.mesh = self.executor.mesh
+    # ------------------------------------------- dispatcher-backed topology
+    @property
+    def devices(self):
+        return self.dispatcher.devices
+
+    @property
+    def axis(self) -> str:
+        return self.dispatcher.axis
+
+    @property
+    def table(self):
+        return self.dispatcher.table
+
+    @property
+    def controller(self):
+        return self.dispatcher.controller
+
+    @property
+    def mesh(self):
+        return self.dispatcher.mesh
+
+    @property
+    def executor(self) -> DistributedExecutor:
+        return self.dispatcher.executor
+
+    @property
+    def grid(self) -> Optional[DataGrid]:
+        return self.dispatcher.grid
+
+    @property
+    def entity_pad(self) -> int:
+        return self.dispatcher.entity_pad
+
+    @property
+    def scale_events(self):
+        return self.dispatcher.scale_events
 
     @property
     def n_members(self) -> int:
-        return self.controller.n_instances
+        return self.dispatcher.n_members
 
     def vm_owner(self, n_vms: int) -> jnp.ndarray:
         """Current VM→member map (the runtime operand of the scan core)."""
-        return jnp.asarray(self.table.owners_of_range(n_vms))
-
-    def _remesh(self, n: int) -> None:
-        old_mesh = self.mesh
-        moved = self.table.rebalance(n)
-        retired = des_scan.invalidate_dist_core(old_mesh, self.axis)
-        self._build(n)
-        if self.grid is not None:
-            self.grid.remesh(self.mesh)
-        self.scale_events.append(
-            {"n_members": n, "moved_partitions": moved,
-             "retired_cores": retired})
+        return self.dispatcher.vm_owner(n_vms)
 
     # ------------------------------------------------------------- scaling
     def observe_load(self, load: float):
         """Feed one load sample (observed/target, the paper's process-CPU
         analogue) to the monitor→probe→IAS chain; a threshold crossing
-        triggers the remesh callback at this step boundary."""
-        return self.controller.tick(load)
+        triggers the dispatcher's remesh callback at this step boundary."""
+        return self.dispatcher.observe_load(load)
 
     # ----------------------------------------------------------- simulation
     def simulate(self, cfg: SimulationConfig) -> SimulationResult:
@@ -416,11 +433,10 @@ class ElasticSimulationCluster:
         configured live entity counts."""
         if cfg.core != "scan_dist":
             cfg = dataclasses.replace(cfg, core="scan_dist")
-        if self.grid is None:
-            self.grid = DataGrid(self.mesh)
+        grid = self.dispatcher.ensure_grid()
         V = pad_to_shards(cfg.n_vms, math.lcm(self.n_members,
                                               self.entity_pad))
-        r = run_simulation(cfg, self.mesh, grid=self.grid,
+        r = run_simulation(cfg, self.mesh, grid=grid,
                            executor=self.executor,
                            vm_owner=self.vm_owner(V),
                            pad_multiple=self.entity_pad)

@@ -80,6 +80,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import dispatch
+from repro.core.dispatch import CompileCache, DispatchJob
+
 _EPS = 1e-6   # same "still running" threshold as the wave-loop reference
 
 
@@ -195,33 +198,33 @@ class ExchangeCapacityError(RuntimeError):
 
 
 # Compiled distributed cores, keyed on (mesh, axis, method, shapes, capacity).
-# A plain dict (not functools.lru_cache) so a scale event can retire exactly
-# the executables built for the mesh it replaces while every other member
-# count's core stays warm; LRU-bounded (hits move to the back, the FRONT is
-# evicted) so long grid sweeps over many (mesh, V, capacity) combinations
-# don't accumulate executables forever — and don't evict the hottest mesh.
-_DIST_CORE_CACHE: Dict[tuple, object] = {}
+# A ``CompileCache`` (the dispatcher's generalized LRU executable cache, which
+# grew out of this dict) so a scale event can retire exactly the executables
+# built for the mesh it replaces while every other member count's core stays
+# warm; LRU-bounded (hits move to the back, the FRONT is evicted) so long
+# grid sweeps over many (mesh, V, capacity) combinations don't accumulate
+# executables forever — and don't evict the hottest mesh.
+_DIST_CORE_CACHE = CompileCache()
 _DIST_CORE_CACHE_MAX = 32
 
 # Auto-sized exchange capacities, keyed (mesh, axis, V, C_pad): steady-state
 # calls reuse the measured block instead of re-histogramming the ownership
 # map on the host every call; overflow triggers an exact-requirement retry
 # that updates the entry (see ``simulate_completion_distributed``).
-_AUTO_BLOCK_CACHE: Dict[tuple, int] = {}
+_AUTO_BLOCK_CACHE = CompileCache()
 
-
-def _cache_get(key):
-    """LRU hit: move the entry to the back so eviction hits cold cores."""
-    fn = _DIST_CORE_CACHE.pop(key, None)
-    if fn is not None:
-        _DIST_CORE_CACHE[key] = fn
-    return fn
+# a dispatcher scale event retires the outgoing mesh's entries from both
+# caches automatically (the auto-block capacities are metadata, not
+# executables, so they don't count toward the event's retired-core tally)
+dispatch.register_geometry_cache("dist_core", _DIST_CORE_CACHE)
+dispatch.register_geometry_cache("auto_block", _AUTO_BLOCK_CACHE,
+                                 counts_as_core=False)
 
 
 def _cache_put(key, fn):
-    while len(_DIST_CORE_CACHE) >= _DIST_CORE_CACHE_MAX:
-        del _DIST_CORE_CACHE[next(iter(_DIST_CORE_CACHE))]   # LRU front
-    _DIST_CORE_CACHE[key] = fn
+    # the cap stays a module global (not CompileCache(max_entries=...)) so
+    # tests can monkeypatch _DIST_CORE_CACHE_MAX around a shared cache
+    _DIST_CORE_CACHE.put(key, fn, max_entries=_DIST_CORE_CACHE_MAX)
 
 
 def invalidate_dist_core(mesh=None, axis: Optional[str] = None) -> int:
@@ -230,15 +233,13 @@ def invalidate_dist_core(mesh=None, axis: Optional[str] = None) -> int:
     controller calls this on SCALE_OUT/IN so the retired member count's
     cores are freed but all other cached cores survive the event.  With no
     arguments, clears everything.  Returns the number of entries dropped."""
-    keys = [k for k in _DIST_CORE_CACHE
-            if (mesh is None or k[0] == mesh) and (axis is None or k[1] == axis)]
-    for k in keys:
-        del _DIST_CORE_CACHE[k]
-    for k in [k for k in _AUTO_BLOCK_CACHE
-              if (mesh is None or k[0] == mesh)
-              and (axis is None or k[1] == axis)]:
-        del _AUTO_BLOCK_CACHE[k]
-    return len(keys)
+    def match(k):
+        return ((mesh is None or k[0] == mesh)
+                and (axis is None or k[1] == axis))
+
+    n = _DIST_CORE_CACHE.invalidate(match)
+    _AUTO_BLOCK_CACHE.invalidate(match)
+    return n
 
 
 def _dist_core_replicated(mesh, axis, V, use_kernel, interpret):
@@ -247,7 +248,7 @@ def _dist_core_replicated(mesh, axis, V, use_kernel, interpret):
     entries of the VMs it doesn't own — result-partitioned, not
     compute-partitioned."""
     key = (mesh, axis, "replicated", V, use_kernel, interpret)
-    cached = _cache_get(key)
+    cached = _DIST_CORE_CACHE.get(key)
     if cached is not None:
         return cached
 
@@ -287,7 +288,7 @@ def _dist_core_exchange(mesh, axis, V, C_pad, block, use_kernel, interpret):
     this cache key — while the VM→member ownership map stays a RUNTIME
     operand, so rebalancing the partition table never recompiles."""
     key = (mesh, axis, "exchange", V, C_pad, block, use_kernel, interpret)
-    cached = _cache_get(key)
+    cached = _DIST_CORE_CACHE.get(key)
     if cached is not None:
         return cached
 
@@ -410,6 +411,7 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
     C_pad = pad_to_shards(max(C, 1), M)
     shard = C_pad // M
     auto = block is None and slack is None
+    measured = False        # only a fresh measurement updates the cache
     if block is None:
         if slack is not None:
             block = exchange_block_size(C, M, slack)
@@ -419,6 +421,7 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
             if block is None:
                 need = int(exchange_load(vm_owner, vm_assign, valid, M).max())
                 block = _pow2_ceil(max(need, 1))
+                measured = True
     block = max(1, min(int(block), shard))
 
     vm_assign = jnp.asarray(vm_assign, jnp.int32)
@@ -446,7 +449,8 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
         # adaptive retry at the device-reported exact requirement; clamped
         # to the shard size, so the second attempt cannot overflow
         block = min(_pow2_ceil(int(need)), shard)
-    if auto:
+        measured = True
+    if auto and measured:   # steady-state hits don't rewrite (or churn) it
         _AUTO_BLOCK_CACHE[bkey] = block
     return finish[:C], makespan
 
@@ -468,6 +472,10 @@ class BatchSimulationResult:
     n_vms: Optional[np.ndarray] = None       # (B,) live VMs per variant
     n_cloudlets: Optional[np.ndarray] = None  # (B,) live cloudlets per variant
     mips_dist: Optional[np.ndarray] = None   # (B,) MIPS-distribution id
+    n_datacenters: Optional[np.ndarray] = None  # (B,) topology (0 = flat)
+    is_loaded: Optional[np.ndarray] = None   # (B,) workload attached?
+    workload_checksum: Optional[np.ndarray] = None  # (B,) isLoaded checksum
+    dispatch: Optional[Dict] = None          # ElasticDispatcher report
 
     @property
     def n_scenarios(self) -> int:
@@ -481,7 +489,8 @@ class BatchSimulationResult:
                 **{f"t_{k}": v for k, v in self.timings.items()}}
 
 
-def grid_scenario_inputs(cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist):
+def grid_scenario_inputs(cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist,
+                         n_datacenters=None):
     """Entities for ONE grid variant at the padded (cfg.n_vms, cfg.n_cloudlets)
     shape — pure and vmappable.  Shape padding: VMs beyond ``n_vms`` get
     0 MIPS and cloudlets beyond ``n_cloudlets`` get ``valid=False``, so
@@ -491,6 +500,13 @@ def grid_scenario_inputs(cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist):
     ``mips_dist`` selects the VM-capacity distribution family: 0 = uniform
     over ``vm_mips_range``, 1 = fixed at the range midpoint, 2 = bimodal
     (each VM at the low or high end, fair coin).
+
+    ``n_datacenters`` (optional, traced) is the datacenter-topology axis:
+    VMs are struck round-robin across that many datacenters, each datacenter
+    carrying a seed-deterministic capacity factor in [0.5, 1.5], so the same
+    VM population performs differently under different topologies.  The
+    sentinel 0 (and ``None``) means FLAT topology — a bit-exact ×1.0 no-op,
+    so pre-axis results are unchanged.  Padded VMs stay at exactly 0 MIPS.
     """
     V, C = cfg.n_vms, cfg.n_cloudlets
     key = jax.random.PRNGKey(seed)
@@ -504,6 +520,15 @@ def grid_scenario_inputs(cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist):
     vm_valid = jnp.arange(V) < n_vms
     vm_mips = jnp.where(vm_valid, vm_mips, 0.0)
 
+    if n_datacenters is not None:
+        n_dc = jnp.asarray(n_datacenters, jnp.int32)
+        kd = jax.random.fold_in(key, 3)    # independent of k1/k2/k3 draws
+        D = max(int(cfg.n_datacenters), 1)
+        dc_factor = jax.random.uniform(kd, (D,), minval=0.5, maxval=1.5)
+        vm_dc = jnp.arange(V, dtype=jnp.int32) % jnp.maximum(n_dc, 1)
+        factor = jnp.where(n_dc > 0, dc_factor[vm_dc], 1.0)
+        vm_mips = vm_mips * factor         # flat: ×1.0, bit-exact no-op
+
     lo, hi = cfg.cloudlet_mi_range
     mi = jax.random.uniform(k2, (C,), minval=lo, maxval=hi) * mi_scale
     valid = jnp.arange(C) < n_cloudlets
@@ -511,34 +536,54 @@ def grid_scenario_inputs(cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist):
     return vm_mips, vm_valid, mi, valid
 
 
-def _grid_scenario(cfg, seed, mi_scale, broker, n_vms, n_cloudlets,
-                   mips_dist):
-    """One full scenario — entities + broker + scan core — pure-functionally
-    (no DataGrid side effects) with every grid axis a traced scalar, so the
-    whole pipeline vmaps over a heterogeneous variant stack."""
+def _grid_workload(cfg, mi, valid, is_loaded):
+    """Per-variant ``isLoaded`` checksum: every live cloudlet runs the real
+    workload payload (``cloudsim._one_workload``) and the sum is the
+    variant's checksum — 0.0 when the variant's ``is_loaded`` flag is off
+    (padded/invalid cloudlets contribute exactly 0 either way)."""
+    from repro.core.cloudsim import _one_workload, workload_iters
+
+    iters = workload_iters(cfg)
+    per = jax.vmap(lambda m: _one_workload(m, cfg.workload_dim, iters))(
+        jnp.where(valid, mi, 0.0))
+    total = jnp.where(valid, per, 0.0).sum()
+    return jnp.where(is_loaded > 0, total, 0.0)
+
+
+def _grid_scenario(cfg, with_workload, seed, mi_scale, broker, n_vms,
+                   n_cloudlets, mips_dist, n_datacenters, is_loaded):
+    """One full scenario — entities + broker + workload + scan core — pure-
+    functionally (no DataGrid side effects) with every grid axis a traced
+    scalar, so the whole pipeline vmaps over a heterogeneous variant stack.
+    ``with_workload`` is STATIC: grids without an ``is_loaded`` axis never
+    trace the workload payload at all."""
     from repro.core.cloudsim import matchmaking_assign_masked
 
     vm_mips, vm_valid, mi, valid = grid_scenario_inputs(
-        cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist)
+        cfg, seed, mi_scale, n_vms, n_cloudlets, mips_dist,
+        n_datacenters=n_datacenters)
     ids = jnp.arange(cfg.n_cloudlets, dtype=jnp.int32)
     rr = (ids % n_vms).astype(jnp.int32)
     mm = matchmaking_assign_masked(ids, mi, vm_mips, vm_valid)
     assign = jnp.where(broker == BROKER_IDS["round_robin"], rr, mm)
+    workload = (_grid_workload(cfg, mi, valid, is_loaded) if with_workload
+                else jnp.zeros((), jnp.float32))
     finish, makespan = simulate_completion_scan(assign, mi, vm_mips, valid,
                                                 use_kernel=cfg.use_kernel)
-    return assign, finish, makespan
+    return assign, finish, makespan, workload
 
 
 @functools.lru_cache(maxsize=32)
-def _batch_fn(cfg):
+def _batch_fn(cfg, with_workload):
     """Jitted vmap of the grid-scenario pipeline, cached per (hashable,
     frozen) config so repeated sweeps with the same cfg and batch shape
     reuse the compiled executable."""
-    return jax.jit(jax.vmap(functools.partial(_grid_scenario, cfg)))
+    return jax.jit(jax.vmap(
+        functools.partial(_grid_scenario, cfg, with_workload)))
 
 
 @functools.lru_cache(maxsize=32)
-def _batch_dist_fn(cfg, mesh, axis):
+def _batch_dist_fn(cfg, mesh, axis, with_workload):
     """Batch-sharded grid: the scenario vmap INSIDE the partitioned
     member_fn, so a grid of B variants shards B/n-per-member across the
     mesh — CloudSim-scale scenario throughput from data-parallel members."""
@@ -547,14 +592,31 @@ def _batch_dist_fn(cfg, mesh, axis):
     executor = DistributedExecutor(mesh, axis)
 
     def member_fn(local):
-        return jax.vmap(functools.partial(_grid_scenario, cfg))(*local)
+        return jax.vmap(
+            functools.partial(_grid_scenario, cfg, with_workload))(*local)
 
-    def call(seeds, scale, broker, n_vms, n_cl, mips_dist):
-        return executor.execute_on_key_owners(
-            member_fn, (seeds, scale, broker, n_vms, n_cl, mips_dist),
-            out_specs=P(axis))
+    def call(*axes):
+        return executor.execute_on_key_owners(member_fn, axes,
+                                              out_specs=P(axis))
 
     return jax.jit(call)
+
+
+def scenario_grid_job(cfg, with_workload: bool = False) -> DispatchJob:
+    """The scenario grid as a dispatcher job: chunk items are the per-variant
+    axis arrays, each member vmaps the scenario pipeline over its local
+    variants, rows concatenate in submission order.  The signature is fully
+    determined by the (frozen, hashable) config + the static workload gate,
+    so every chunk of a geometry reuses one executable."""
+    fn = functools.partial(_grid_scenario, cfg, with_workload)
+
+    def member_fn(local, valid, *_):
+        del valid                          # concat path: pad rows trimmed off
+        return jax.vmap(fn)(*local)
+
+    return DispatchJob(name="scenario_grid",
+                       signature=("scenario_grid", cfg, with_workload),
+                       member_fn=member_fn, reduce="concat")
 
 
 def _axis_array(value, B, dtype, name, id_map=None):
@@ -575,25 +637,37 @@ def _axis_array(value, B, dtype, name, id_map=None):
 
 def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
                          n_vms=None, n_cloudlets=None, mips_dist=None,
-                         executor=None) -> BatchSimulationResult:
+                         n_datacenters=None, is_loaded=None,
+                         executor=None, dispatcher=None, chunk=None,
+                         on_chunk=None) -> BatchSimulationResult:
     """Execute a multi-axis scenario GRID in a SINGLE jitted vmap.
 
     seeds: (B,) int array — one PRNG stream per scenario.  The optional grid
     axes are each a (B,) per-variant array (or a scalar applied to all):
 
-      mi_scale    — float multiplier on cloudlet lengths (workload sweep)
-      broker      — "round_robin" | "matchmaking" (names or BROKER_IDS ints)
-      n_vms       — live VM count ≤ cfg.n_vms; the rest are 0-MIPS padding
-      n_cloudlets — live cloudlet count ≤ cfg.n_cloudlets; rest valid=False
-      mips_dist   — "uniform" | "fixed" | "bimodal" (or MIPS_DIST_IDS ints)
+      mi_scale      — float multiplier on cloudlet lengths (workload sweep)
+      broker        — "round_robin" | "matchmaking" (names or BROKER_IDS ints)
+      n_vms         — live VM count ≤ cfg.n_vms; the rest are 0-MIPS padding
+      n_cloudlets   — live cloudlet count ≤ cfg.n_cloudlets; rest valid=False
+      mips_dist     — "uniform" | "fixed" | "bimodal" (or MIPS_DIST_IDS ints)
+      n_datacenters — datacenter-topology axis: VMs round-robin over that
+                      many datacenters with seed-deterministic capacity
+                      factors; 0 = flat topology (bit-exact no-op)
+      is_loaded     — 0/1: attach the real ``isLoaded`` workload payload and
+                      report its per-variant checksum (finish times are
+                      untouched; padded rows keep finish exactly 0)
 
     The closed-form core has no data-dependent loop and every axis is a
     traced scalar, so B heterogeneous variants cost one XLA dispatch; ≥96
     variants per jit is the intended operating point.  With ``executor``
     (a multi-member mesh) the grid is sharded B/n-per-member: the scenario
-    vmap runs inside the partitioned member_fn.  ``cfg.use_kernel`` is
-    honored; only the vmappable ``core="scan"`` is supported (the wave loop
-    doesn't batch).
+    vmap runs inside the partitioned member_fn.  With ``dispatcher`` (an
+    ``ElasticDispatcher``) the grid is submitted as a STREAMING job: cut
+    into ``chunk``-variant chunks (grids larger than device memory), one
+    compile per (geometry, job-signature), surviving IAS scale events
+    between chunks (``on_chunk`` can feed ``observe_load``).  ``cfg.
+    use_kernel`` is honored; only the vmappable ``core="scan"`` is
+    supported (the wave loop doesn't batch).
     """
     if cfg.core != "scan":
         raise ValueError(
@@ -612,30 +686,50 @@ def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
                     cfg.n_vms, jnp.int32)
     n_cl = default(_axis_array(n_cloudlets, B, jnp.int32, "n_cloudlets"),
                    cfg.n_cloudlets, jnp.int32)
+    n_dc = default(_axis_array(n_datacenters, B, jnp.int32, "n_datacenters"),
+                   0, jnp.int32)
+    with_workload = is_loaded is not None      # STATIC workload gate
+    loaded = default(_axis_array(is_loaded, B, jnp.int32, "is_loaded"),
+                     0, jnp.int32)
     # live counts must fit the padded shapes — JAX's clamping gather would
     # otherwise turn an oversized variant into silently-wrong results
-    for name, arr, cap in (("n_vms", n_vms, cfg.n_vms),
-                           ("n_cloudlets", n_cl, cfg.n_cloudlets)):
+    for name, arr, low, cap in (
+            ("n_vms", n_vms, 1, cfg.n_vms),
+            ("n_cloudlets", n_cl, 1, cfg.n_cloudlets),
+            ("n_datacenters", n_dc, 0, cfg.n_datacenters),
+            ("is_loaded", loaded, 0, 1)):
+        if B == 0:
+            break                        # nothing to validate (or run)
         lo, hi = int(arr.min()), int(arr.max())
-        if lo < 1 or hi > cap:
-            raise ValueError(f"{name} axis must lie in [1, {cap}] "
+        if lo < low or hi > cap:
+            raise ValueError(f"{name} axis must lie in [{low}, {cap}] "
                              f"(the padded cfg shape), got [{lo}, {hi}]")
     mips_dist = default(_axis_array(mips_dist, B, jnp.int32, "mips_dist",
                                     MIPS_DIST_IDS),
                         MIPS_DIST_IDS["uniform"], jnp.int32)
-    args = (seeds, scale, broker, n_vms, n_cl, mips_dist)
+    args = (seeds, scale, broker, n_vms, n_cl, mips_dist, n_dc, loaded)
 
+    report = None
     t0 = time.perf_counter()
-    if executor is not None and executor.n_members > 1:
+    if dispatcher is not None and executor is not None:
+        raise ValueError("pass either executor= (fixed mesh-sharded batch) "
+                         "or dispatcher= (elastic chunk streaming), not "
+                         "both — the dispatcher owns its own geometry")
+    if dispatcher is not None:
+        job = scenario_grid_job(cfg, with_workload)
+        (assign, finish, makespans, workload), report = dispatcher.submit(
+            job, args, chunk=chunk, on_chunk=on_chunk)
+    elif executor is not None and executor.n_members > 1:
         n = executor.n_members
         pad = (-B) % n                   # round B up to a whole shard each
         if pad:
             args = tuple(jnp.concatenate([a, a[-1:].repeat(pad)])
                          for a in args)
-        fn = _batch_dist_fn(cfg, executor.mesh, executor.axis)
-        assign, finish, makespans = (o[:B] for o in fn(*args))
+        fn = _batch_dist_fn(cfg, executor.mesh, executor.axis, with_workload)
+        assign, finish, makespans, workload = (o[:B] for o in fn(*args))
     else:
-        assign, finish, makespans = _batch_fn(cfg)(*args)
+        assign, finish, makespans, workload = _batch_fn(cfg, with_workload)(
+            *args)
     jax.block_until_ready(makespans)
     wall = time.perf_counter() - t0
     return BatchSimulationResult(
@@ -643,7 +737,10 @@ def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
         makespans=np.asarray(makespans),
         timings={"batch_total": wall, "per_scenario": wall / max(B, 1)},
         broker=np.asarray(broker), n_vms=np.asarray(n_vms),
-        n_cloudlets=np.asarray(n_cl), mips_dist=np.asarray(mips_dist))
+        n_cloudlets=np.asarray(n_cl), mips_dist=np.asarray(mips_dist),
+        n_datacenters=np.asarray(n_dc), is_loaded=np.asarray(loaded),
+        workload_checksum=(np.asarray(workload) if with_workload else None),
+        dispatch=(report.summary() if report is not None else None))
 
 
 def make_scenario_grid(seeds: Sequence[int],
@@ -652,12 +749,15 @@ def make_scenario_grid(seeds: Sequence[int],
                        vm_counts: Sequence[int] = (0,),
                        cloudlet_counts: Sequence[int] = (0,),
                        mips_dists: Sequence[Union[str, int]] = ("uniform",),
+                       dc_counts: Sequence[int] = (0,),
+                       loaded: Sequence[int] = (0,),
                        ) -> Dict[str, np.ndarray]:
     """Cartesian product of grid axes → per-variant (B,) arrays, B = the
     product of axis lengths.  A 0 in ``vm_counts``/``cloudlet_counts`` means
-    "the config's full count" — the sentinel is resolved against a config by
-    ``run_scenario_grid(cfg, grid)``, the intended way to execute the
-    product."""
+    "the config's full count"; a 0 in ``dc_counts`` means flat datacenter
+    topology; ``loaded`` entries are 0/1 ``isLoaded`` flags.  The sentinels
+    are resolved against a config by ``run_scenario_grid(cfg, grid)``, the
+    intended way to execute the product."""
     brokers = [BROKER_IDS[b] if isinstance(b, str) else int(b)
                for b in brokers]
     mips_dists = [MIPS_DIST_IDS[d] if isinstance(d, str) else int(d)
@@ -667,21 +767,34 @@ def make_scenario_grid(seeds: Sequence[int],
                        np.asarray(brokers, np.int32),
                        np.asarray(vm_counts, np.int32),
                        np.asarray(cloudlet_counts, np.int32),
-                       np.asarray(mips_dists, np.int32), indexing="ij")
+                       np.asarray(mips_dists, np.int32),
+                       np.asarray(dc_counts, np.int32),
+                       np.asarray([int(v) for v in loaded], np.int32),
+                       indexing="ij")
     flat = [a.ravel() for a in axes]
     return {"seeds": flat[0], "mi_scale": flat[1], "broker": flat[2],
-            "n_vms": flat[3], "n_cloudlets": flat[4], "mips_dist": flat[5]}
+            "n_vms": flat[3], "n_cloudlets": flat[4], "mips_dist": flat[5],
+            "n_datacenters": flat[6], "is_loaded": flat[7]}
 
 
 def run_scenario_grid(cfg, grid: Dict[str, np.ndarray], *,
-                      executor=None) -> BatchSimulationResult:
+                      executor=None, dispatcher=None, chunk=None,
+                      on_chunk=None) -> BatchSimulationResult:
     """Run a ``make_scenario_grid`` product through ``run_simulation_batch``
-    (0-valued VM/cloudlet counts resolve to the config's full counts)."""
+    (0-valued VM/cloudlet counts resolve to the config's full counts).
+    With ``dispatcher``, the grid streams through the elastic dispatch
+    middleware in ``chunk``-sized dispatches (see ``run_simulation_batch``).
+    An ``is_loaded`` axis that is all-zero is dropped so the workload
+    payload is never traced for grids that don't use it."""
     g = dict(grid)
     g["n_vms"] = np.where(np.asarray(g["n_vms"]) == 0, cfg.n_vms,
                           g["n_vms"]).astype(np.int32)
     g["n_cloudlets"] = np.where(np.asarray(g["n_cloudlets"]) == 0,
                                 cfg.n_cloudlets,
                                 g["n_cloudlets"]).astype(np.int32)
+    if "is_loaded" in g and not np.asarray(g["is_loaded"]).any():
+        g.pop("is_loaded")                # static gate: skip workload tracing
     seeds = g.pop("seeds")
-    return run_simulation_batch(cfg, seeds, executor=executor, **g)
+    return run_simulation_batch(cfg, seeds, executor=executor,
+                                dispatcher=dispatcher, chunk=chunk,
+                                on_chunk=on_chunk, **g)

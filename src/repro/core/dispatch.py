@@ -1,0 +1,512 @@
+"""ElasticDispatcher — the unified, remesh-aware, chunk-streaming job layer.
+
+The thesis closes by claiming Cloud²Sim's "distributed execution model and
+adaptive scaling solution could be leveraged as a general purpose auto scaler
+middleware".  This module IS that middleware for the repo: one dispatch layer
+that the scenario grids, the MapReduce engine, and the elastic simulation
+cluster all sit on, instead of each carrying its own ad-hoc mesh/shard/cache
+logic.  Concept map to the thesis's middleware vocabulary:
+
+  IExecutorService / executeOnKeyOwner   ``DispatchJob.member_fn`` — logic
+                                         ships to each member's local chunk
+                                         partition via ``DistributedExecutor``
+  distributed task queue                 the chunk stream of ``submit``: a job
+                                         larger than one dispatch (or than
+                                         device memory) is cut into fixed-
+                                         shape chunks and executed in order,
+                                         each chunk a task taken off the queue
+  Hazelcast partition table (§4.1.3)     the 271-virtual-shard
+                                         ``PartitionTable`` owned here; its
+                                         VM→member map is a RUNTIME operand of
+                                         the distributed cores, so rebalances
+                                         never recompile
+  adaptive scaler (Algorithms 4–6, §5)   ``ElasticController`` → IAS; when it
+                                         fires BETWEEN chunks the dispatcher
+                                         rebalances the table, retires exactly
+                                         the outgoing geometry's executables,
+                                         rebuilds the mesh, re-homes the
+                                         ``DataGrid``, and the stream resumes
+                                         on the new member set
+  compiled-task near-cache               ``CompileCache`` — one executable per
+                                         (geometry, job-signature), LRU, with
+                                         hit/miss/build counters, absorbing
+                                         and generalizing the scan core's
+                                         ``_DIST_CORE_CACHE``/
+                                         ``_AUTO_BLOCK_CACHE``
+
+Jobs are declared as ``DispatchJob`` descriptors — ``(member_fn | global_fn,
+reduce)``.  ``member_fn(local_items, local_valid, *replicated)`` runs on each
+member's shard of the chunk (the Hazelcast-style explicit path);
+``global_fn(items, valid, *replicated)`` expresses the same job as one global
+computation whose schedule the partitioner chooses (the Infinispan-style
+auto-SPMD path).  ``reduce`` combines chunks: "concat" streams row results,
+"sum"/"max" accumulate associative partials, so integer reductions (e.g. word
+count) are BIT-identical for any member count, chunking, or mid-stream scale
+event — the thesis's accuracy-under-elasticity claim at the job layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.executor import DistributedExecutor
+from repro.core.grid import DataGrid
+from repro.core.partition import (DEFAULT_PARTITION_COUNT, PartitionTable,
+                                  pad_to_shards, partition_weights_from_keys)
+
+
+# --------------------------------------------------------------- compile cache
+
+_MISSING = object()
+
+
+class CompileCache:
+    """LRU cache of compiled executables keyed by (geometry, signature...).
+
+    Insertion-ordered dict semantics with the FRONT as the eviction victim;
+    ``get`` moves a hit to the back (so sweeps over many geometries never
+    evict the hottest one) and counts hits/misses; ``put`` counts builds.
+    Dict-style access (``len``/``in``/iteration/``[]``) peeks WITHOUT
+    disturbing recency — the elastic invalidation path and tests use it to
+    inspect entries.  The counters are the observable the dispatch acceptance
+    tests pin: a chunk stream must build at most one executable per
+    (geometry, job-signature) and hit the cache for every later chunk.
+    """
+
+    def __init__(self, max_entries: int = 64):
+        self.max_entries = max_entries
+        self._store: Dict[Hashable, object] = {}
+        self.hits = 0
+        self.misses = 0
+        self.builds = 0
+
+    # ------------------------------------------------------------ LRU access
+    def get(self, key, default=None):
+        val = self._store.pop(key, _MISSING)
+        if val is _MISSING:
+            self.misses += 1
+            return default
+        self._store[key] = val            # move to back: most recently used
+        self.hits += 1
+        return val
+
+    def put(self, key, value, max_entries: Optional[int] = None,
+            count_build: bool = True):
+        """``count_build=False`` for metadata writes (cached ints, measured
+        capacities) so ``builds`` keeps meaning COMPILED EXECUTABLES — the
+        observable the dispatch acceptance tests pin."""
+        cap = self.max_entries if max_entries is None else max_entries
+        self._store.pop(key, None)
+        while len(self._store) >= max(cap, 1):
+            del self._store[next(iter(self._store))]   # evict the LRU front
+        self._store[key] = value
+        if count_build:
+            self.builds += 1
+
+    def get_or_build(self, key, builder: Callable[[], object],
+                     max_entries: Optional[int] = None):
+        val = self.get(key, _MISSING)
+        if val is _MISSING:
+            val = builder()
+            self.put(key, val, max_entries)
+        return val
+
+    # ----------------------------------------------------------- maintenance
+    def invalidate(self, match: Optional[Callable[[Hashable], bool]] = None
+                   ) -> int:
+        """Drop entries whose key satisfies ``match`` (all, when None).
+        Returns the number of entries dropped — the scale-event path uses it
+        to report exactly how many executables the outgoing geometry held."""
+        keys = [k for k in self._store if match is None or match(k)]
+        for k in keys:
+            del self._store[k]
+        return len(keys)
+
+    def stats(self) -> Dict[str, int]:
+        return {"size": len(self._store), "hits": self.hits,
+                "misses": self.misses, "builds": self.builds}
+
+    # ------------------------------------------------- dict-style inspection
+    def __len__(self):
+        return len(self._store)
+
+    def __iter__(self):
+        return iter(self._store)
+
+    def __contains__(self, key):
+        return key in self._store
+
+    def __getitem__(self, key):          # peek: no recency update, no count
+        return self._store[key]
+
+    def __setitem__(self, key, value):   # metadata write: not an executable
+        self.put(key, value, count_build=False)
+
+    def __delitem__(self, key):
+        del self._store[key]
+
+
+# ----------------------------------------------------- geometry-cache registry
+#
+# Any module that keeps its own (mesh, axis, ...)-keyed executable cache
+# registers it here at import time; a dispatcher scale event then retires the
+# outgoing mesh's entries from EVERY registered cache without the middleware
+# having to know client modules by name (des_scan registers its distributed
+# scan cores and auto-sized exchange capacities this way).
+
+_GEOMETRY_CACHES: List[Tuple[str, CompileCache, bool]] = []
+
+
+def register_geometry_cache(name: str, cache: CompileCache,
+                            counts_as_core: bool = True) -> None:
+    """Register a cache whose keys lead with ``(mesh, axis, ...)`` for
+    automatic retirement on scale events.  ``counts_as_core=False`` for
+    metadata caches (e.g. measured exchange capacities) that should be
+    dropped but not reported as retired executables."""
+    _GEOMETRY_CACHES.append((name, cache, counts_as_core))
+
+
+# ------------------------------------------------------------ job descriptors
+
+@dataclasses.dataclass(frozen=True)
+class DispatchJob:
+    """One streaming job: how a chunk executes and how chunks combine.
+
+    Exactly one of ``member_fn``/``global_fn`` must be set:
+
+      member_fn(local_items, local_valid, *replicated)
+          runs on each member's shard of the chunk (executeOnKeyOwner).  For
+          ``reduce="concat"`` it returns per-row outputs (leading dim = the
+          local shard) which the dispatcher reassembles in global row order;
+          for "sum"/"max" it returns a partial aggregate which the dispatcher
+          combines across members (psum/pmax) and then across chunks.
+      global_fn(items, valid, *replicated)
+          expresses the whole chunk as one global computation; the partitioner
+          (auto-SPMD) chooses the schedule.  Cross-chunk combination still
+          follows ``reduce``.
+
+    ``local_valid``/``valid`` is a bool mask marking the chunk's live rows —
+    the dispatcher pads every chunk to a fixed shard-divisible shape so the
+    compile cache hits, and padded rows MUST NOT contribute to "sum"/"max"
+    aggregates (mask them; for "concat" the dispatcher trims them off).
+
+    ``signature`` is the job's static compile identity: it must determine the
+    traced computation completely (the dispatcher may reuse an executable
+    built from an earlier ``DispatchJob`` carrying an equal signature).
+    """
+    name: str
+    signature: Hashable
+    member_fn: Optional[Callable] = None
+    global_fn: Optional[Callable] = None
+    reduce: str = "concat"               # "concat" | "sum" | "max"
+
+    def __post_init__(self):
+        if (self.member_fn is None) == (self.global_fn is None):
+            raise ValueError("exactly one of member_fn/global_fn required")
+        if self.reduce not in ("concat", "sum", "max"):
+            raise ValueError(f"unknown reduce {self.reduce!r}")
+
+
+@dataclasses.dataclass
+class DispatchReport:
+    """What one ``submit`` stream did — the acceptance-test observable."""
+    job: str
+    n_items: int
+    chunk: int
+    n_chunks: int = 0
+    compiles: int = 0                    # executables built this stream
+    cache_hits: int = 0                  # chunks served by a cached executable
+    members_per_chunk: List[int] = dataclasses.field(default_factory=list)
+    scale_events: int = 0                # remesh events fired mid-stream
+    wall_s: float = 0.0
+
+    def summary(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+# ------------------------------------------------------------- the dispatcher
+
+class ElasticDispatcher:
+    """Owns mesh, ownership table, compile cache, and the chunk stream.
+
+    One instance per tenant/cluster.  ``submit`` streams a job chunk by
+    chunk; between chunks the ``ElasticController`` may fire (driven by
+    ``observe_load`` from an ``on_chunk`` callback, or automatically from
+    measured chunk wall time when ``auto_scale=True``) and the stream
+    resumes on the re-built mesh — compiled executables for the outgoing
+    geometry are retired, every other geometry's stay warm.
+    """
+
+    def __init__(self, devices=None, axis: str = "data",
+                 health_cfg=None, start_members: int = 1,
+                 partition_count: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 cache_entries: int = 64, auto_scale: bool = False):
+        from repro.core.elastic import ElasticController, entity_pad_multiple
+        from repro.core.health import HealthConfig
+
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.axis = axis
+        n0 = max(1, min(start_members, len(self.devices)))
+        self.table = PartitionTable(
+            partition_count=partition_count or DEFAULT_PARTITION_COUNT,
+            n_instances=n0)
+        hc = health_cfg or HealthConfig()
+        hc = dataclasses.replace(
+            hc, max_instances=min(hc.max_instances, len(self.devices)))
+        self.health_cfg = hc
+        # ENTITY sizes pad to this multiple so shapes are identical at every
+        # member count the IAS can reach (bit-stable scale events for the
+        # elastic cluster).  Chunk streams don't need it: each geometry pads
+        # chunks to its own shard multiple, and chunk rows are independent.
+        self.entity_pad = entity_pad_multiple(hc, n0)
+        self.controller = ElasticController(hc, n0, remesh_fn=self._remesh)
+        self.cache = CompileCache(cache_entries)
+        self.chunk_size = chunk_size
+        self.auto_scale = auto_scale
+        self.grid: Optional[DataGrid] = None
+        self.scale_events: List[dict] = []
+        self._key_weights: Optional[np.ndarray] = None
+        self._build(n0)
+
+    @classmethod
+    def for_mesh(cls, mesh, axis: Optional[str] = None) -> "ElasticDispatcher":
+        """A FROZEN dispatcher bound to an existing 1-D mesh: same devices,
+        same axis name, min_instances == max_instances so the IAS can never
+        fire.  Lets mesh-first callers (the legacy MapReduce constructor)
+        run on the unified job layer without opting into elasticity."""
+        from repro.core.health import HealthConfig
+
+        if mesh.devices.ndim != 1:
+            raise ValueError("for_mesh requires a 1-D mesh, got shape "
+                             f"{mesh.devices.shape}")
+        axis = axis or mesh.axis_names[0]
+        n = int(mesh.devices.size)
+        hc = HealthConfig(min_instances=n, max_instances=n)
+        return cls(devices=list(mesh.devices.ravel()), axis=axis,
+                   health_cfg=hc, start_members=n)
+
+    # --------------------------------------------------------------- topology
+    def _build(self, n: int) -> None:
+        self.executor = DistributedExecutor.for_devices(self.devices[:n],
+                                                        self.axis)
+        self.mesh = self.executor.mesh
+
+    @property
+    def n_members(self) -> int:
+        return self.controller.n_instances
+
+    def ensure_grid(self) -> DataGrid:
+        """The dispatcher-owned DataGrid, created lazily on the current mesh
+        and re-homed automatically on every scale event."""
+        if self.grid is None:
+            self.grid = DataGrid(self.mesh, axis=self.axis)
+        return self.grid
+
+    def vm_owner(self, n_keys: int) -> jnp.ndarray:
+        """Current key→member ownership (the distributed cores' runtime
+        operand) for int keys 0..n_keys-1."""
+        return jnp.asarray(self.table.owners_of_range(n_keys))
+
+    # ---------------------------------------------------------------- scaling
+    def observe_load(self, load: float):
+        """Feed one normalized load sample (observed/target) to the
+        monitor→probe→IAS chain; a threshold crossing triggers ``_remesh``
+        at this chunk/step boundary."""
+        return self.controller.tick(load)
+
+    def observe_key_weights(self, weights) -> None:
+        """Record observed per-key load (e.g. the scan core's
+        ``exchange_load`` summed per VM).  The NEXT rebalance becomes
+        locality-aware: virtual partitions level by weighted load, so a hot
+        key's partition stops dragging a full share of cold partitions onto
+        its member (ROADMAP exchange follow-on c).  One-shot: the sample is
+        CONSUMED by that rebalance — later scale events fall back to count
+        leveling unless a fresh observation is fed, so a long-stale load
+        profile never keeps steering placement."""
+        self._key_weights = None if weights is None else np.asarray(
+            weights, np.float64)
+
+    def _partition_weights(self) -> Optional[np.ndarray]:
+        if self._key_weights is None:
+            return None
+        return partition_weights_from_keys(self._key_weights,
+                                           self.table.partition_count)
+
+    def _remesh(self, n: int) -> None:
+        """The scale-event callback: rebalance table → retire exactly the
+        outgoing geometry's executables (every registered geometry cache +
+        this dispatcher's job cache) → rebuild mesh → re-home DataGrid."""
+        old_mesh, axis = self.mesh, self.axis
+        moved = self.table.rebalance(n, weights=self._partition_weights())
+        self._key_weights = None        # one-shot: consumed by this event
+        match = lambda k: k[0] == old_mesh and k[1] == axis
+        retired = 0
+        for _, cache, counted in _GEOMETRY_CACHES:
+            dropped = cache.invalidate(match)
+            if counted:
+                retired += dropped
+        retired_jobs = self.cache.invalidate(match)
+        self._build(n)
+        if self.grid is not None:
+            self.grid.remesh(self.mesh)
+        self.scale_events.append(
+            {"n_members": n, "moved_partitions": moved,
+             "retired_cores": retired, "retired_jobs": retired_jobs})
+
+    # ------------------------------------------------------------- submission
+    def submit(self, job: DispatchJob, items, *, replicated=(),
+               chunk: Optional[int] = None,
+               on_chunk: Optional[Callable] = None) -> Tuple[object,
+                                                             DispatchReport]:
+        """Stream ``items`` (a pytree of arrays sharing leading dim B)
+        through ``job`` in fixed-shape chunks.
+
+        Every chunk is padded to ``pad_to_shards(chunk, n_members)`` rows
+        (live rows flagged by the valid mask), so all chunks of a geometry
+        share ONE executable — grids larger than device memory stream with
+        at most one compile per (geometry, job-signature).  After each chunk
+        ``on_chunk(dispatcher, chunk_index, n_chunks)`` runs (feed
+        ``observe_load`` there to drive the IAS deterministically), or, with
+        ``auto_scale=True``, the measured chunk wall time is fed as the load
+        sample; if the IAS fires, the remaining chunks re-home onto the new
+        member set.  Returns ``(outputs, DispatchReport)``.
+        """
+        leaves = jax.tree_util.tree_leaves(items)
+        if not leaves:
+            raise ValueError("submit needs at least one item array")
+        B = int(leaves[0].shape[0])
+        if any(int(l.shape[0]) != B for l in leaves):
+            raise ValueError("item arrays must share their leading dim")
+        chunk = chunk if chunk is not None else (self.chunk_size or B)
+        chunk = max(1, min(int(chunk), max(B, 1)))
+        # B == 0 still runs ONE fully-padded chunk (valid all-False): concat
+        # outputs trim to correct empty arrays, sum/max partials reduce over
+        # masked-out rows only — parity with the non-dispatcher vmap path
+        n_chunks = max(-(-B // chunk), 1)
+        items_np = jax.tree_util.tree_map(np.asarray, items)
+
+        report = DispatchReport(job=job.name, n_items=B, chunk=chunk,
+                                n_chunks=n_chunks)
+        hits0, builds0 = self.cache.hits, self.cache.builds
+        events0 = len(self.scale_events)
+        collected = []                    # concat: per-chunk trimmed outputs
+        acc = None                        # sum/max accumulator
+        t_start = time.perf_counter()
+        for ci in range(n_chunks):
+            lo, hi = ci * chunk, min((ci + 1) * chunk, B)
+            n_live = hi - lo
+            M = self.executor.n_members
+            L = pad_to_shards(chunk, M)
+            sl = jax.tree_util.tree_map(lambda a: a[lo:hi], items_np)
+            if L != n_live:               # pad by repeating the last row —
+                # a well-defined duplicate the valid mask marks dead
+                # (zeros when the slice is empty: nothing to repeat)
+                sl = jax.tree_util.tree_map(
+                    lambda a: np.concatenate(
+                        [a, np.repeat(a[-1:], L - n_live, axis=0)])
+                    if n_live else np.zeros((L,) + a.shape[1:], a.dtype), sl)
+            valid = np.arange(L) < n_live
+            builds_before = self.cache.builds
+            fn = self._executable(job, sl, replicated, L)
+            compiled_now = self.cache.builds != builds_before
+            t0 = time.perf_counter()
+            out = fn(sl, jnp.asarray(valid), *replicated)
+            out = jax.tree_util.tree_map(np.asarray, out)
+            wall = time.perf_counter() - t0
+            if job.reduce == "concat":
+                collected.append(jax.tree_util.tree_map(
+                    lambda a: a[:n_live], out))
+            elif acc is None:
+                acc = out
+            else:
+                comb = np.add if job.reduce == "sum" else np.maximum
+                acc = jax.tree_util.tree_map(comb, acc, out)
+            report.members_per_chunk.append(M)
+            if on_chunk is not None:
+                on_chunk(self, ci, n_chunks)
+            elif self.auto_scale and not compiled_now:
+                # a cache-miss chunk's wall is dominated by trace+compile
+                # time (often 10-100x steady state) — feeding it would
+                # ratchet the IAS to max_instances on pure compile noise
+                self.observe_load(wall / self.health_cfg.target_step_time)
+        report.compiles = self.cache.builds - builds0
+        report.cache_hits = self.cache.hits - hits0
+        report.scale_events = len(self.scale_events) - events0
+        report.wall_s = time.perf_counter() - t_start
+        if job.reduce == "concat":
+            outputs = jax.tree_util.tree_map(
+                lambda *parts: np.concatenate(parts, axis=0), *collected)
+        else:
+            outputs = acc
+        return outputs, report
+
+    # ------------------------------------------------------------ executables
+    def _executable(self, job: DispatchJob, chunk_tree, replicated, L: int):
+        """One compiled callable per (mesh, axis, signature, reduce, shapes).
+        The mesh in the key is the ONLY geometry binding: a scale event
+        retires exactly the outgoing mesh's entries (``_remesh``), every
+        other geometry's executables stay warm for when the IAS returns."""
+        struct = tuple(
+            (tuple(a.shape[1:]), np.dtype(a.dtype).str)
+            for a in jax.tree_util.tree_leaves(chunk_tree))
+        rep_struct = tuple(
+            (tuple(np.shape(a)), np.dtype(np.asarray(a).dtype).str)
+            for a in jax.tree_util.tree_leaves(replicated))
+        mode = "member" if job.member_fn is not None else "global"
+        key = (self.mesh, self.axis, job.signature, job.reduce, mode, L,
+               struct, rep_struct)
+        fn = self.cache.get(key)
+        if fn is None:
+            builder = (self._build_member if mode == "member"
+                       else self._build_global)
+            fn = builder(job)
+            self.cache.put(key, fn)
+        return fn
+
+    def _build_member(self, job: DispatchJob):
+        executor = self.executor          # bound to the key's mesh
+        axis = self.axis
+
+        def body(data, *rep):
+            local, lval = data
+            out = job.member_fn(local, lval, *rep)
+            if job.reduce == "sum":
+                return jax.tree_util.tree_map(executor.psum, out)
+            if job.reduce == "max":
+                return jax.tree_util.tree_map(executor.pmax, out)
+            return out
+
+        out_specs = P(axis) if job.reduce == "concat" else P()
+
+        def call(chunk_tree, valid, *rep):
+            return executor.execute_on_key_owners(
+                body, (chunk_tree, valid), replicated_args=rep,
+                out_specs=out_specs)
+
+        return jax.jit(call)
+
+    def _build_global(self, job: DispatchJob):
+        executor = self.executor
+        axis = self.axis
+        jitted = jax.jit(lambda chunk_tree, valid, *rep:
+                         job.global_fn(chunk_tree, valid, *rep))
+
+        def call(chunk_tree, valid, *rep):
+            # auto-SPMD: place the chunk partitioned, the rest replicated,
+            # and let the partitioner choose the schedule (Infinispan flavor)
+            sharded = jax.tree_util.tree_map(
+                lambda a: executor.put(jnp.asarray(a), P(axis)), chunk_tree)
+            valid = executor.put(jnp.asarray(valid), P(axis))
+            rep = tuple(jax.tree_util.tree_map(
+                lambda a: executor.put(jnp.asarray(a), P()), r)
+                for r in rep)
+            return jitted(sharded, valid, *rep)
+
+        return call

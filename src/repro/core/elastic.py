@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
+import math
 from typing import Callable, Dict, List, Optional
 
 from repro.core.health import HealthConfig, HealthMonitor, HealthSample
@@ -109,6 +111,14 @@ def reachable_member_counts(cfg: HealthConfig, start: int) -> frozenset:
             if nxt >= 1 and nxt not in seen:
                 frontier.add(nxt)
     return frozenset(seen)
+
+
+def entity_pad_multiple(cfg: HealthConfig, start: int) -> int:
+    """LCM of every member count reachable from ``start`` — the entity/chunk
+    pad multiple that keeps array shapes (hence PRNG draws and finish
+    vectors) BIT-identical across every scale event the IAS can take.  Used
+    by both the elastic simulation cluster and the dispatcher."""
+    return functools.reduce(math.lcm, reachable_member_counts(cfg, start))
 
 
 class ElasticController:

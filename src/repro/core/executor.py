@@ -34,6 +34,21 @@ class DistributedExecutor:
     def n_members(self) -> int:
         return self.mesh.shape[self.axis]
 
+    def sharding(self, spec: P) -> NamedSharding:
+        """A NamedSharding on this executor's mesh — the placement vocabulary
+        the dispatcher's auto-SPMD (global_fn) path speaks."""
+        return NamedSharding(self.mesh, spec)
+
+    def put(self, value, spec: P = None):
+        """Place ``value`` on the mesh: partitioned on dim 0 by default
+        (scalars replicate — there is no dim to partition), replicated with
+        ``P()``, or any explicit spec."""
+        value = jnp.asarray(value)
+        if spec is None:
+            spec = (P() if value.ndim == 0
+                    else P(self.axis, *([None] * (value.ndim - 1))))
+        return jax.device_put(value, self.sharding(spec))
+
     def execute_on_key_owners(self, fn: Callable, data, *, out_specs=None,
                               replicated_args=()):
         """Run ``fn(local_shard, *replicated_args)`` on each member's partition.

@@ -38,6 +38,9 @@ class DataGrid:
         self.axis = axis
         self.backup_count = backup_count
         self._store: Dict[str, GridEntry] = {}
+        # entries whose sharded spec was downgraded to replicated by a
+        # remesh (leading dim not divisible by the new member count)
+        self.downgraded: Dict[str, P] = {}
 
     @property
     def n_members(self) -> int:
@@ -58,6 +61,9 @@ class DataGrid:
         if self.backup_count > 0:
             entry.backup = self._make_backup(value)
         self._store[name] = entry
+        # a replaced entry's spec is authoritative: drop any stale remesh-
+        # downgrade record, else a later remesh would resurrect the old spec
+        self.downgraded.pop(name, None)
         return value
 
     def get(self, name: str) -> jax.Array:
@@ -71,10 +77,12 @@ class DataGrid:
 
     def remove(self, name: str):
         self._store.pop(name, None)
+        self.downgraded.pop(name, None)
 
     def clear(self):
         """clearDistributedObjects() — end-of-simulation cleanup."""
         self._store.clear()
+        self.downgraded.clear()
 
     # ------------------------------------------------------------- backups
     def _make_backup(self, value: jax.Array) -> jax.Array:
@@ -92,6 +100,13 @@ class DataGrid:
         if e.backup is None:
             raise RuntimeError(f"no synchronous backup for {name!r}")
         n = self.n_members
+        if e.value.shape[0] % n != 0 or n == 1:
+            # degenerate backup (see _make_backup): a full replicated copy,
+            # not neighbor-rolled — unrolling it would corrupt the restore
+            out = jax.device_put(jnp.asarray(e.backup),
+                                 self._sharding(e.spec))
+            self._store[name] = dataclasses.replace(e, value=out)
+            return out
         shard = e.value.shape[0] // n
         lo = lost_member * shard
         val = np.asarray(e.value).copy()
@@ -107,18 +122,33 @@ class DataGrid:
         """Elastic re-shard (scale event): re-home every entry onto the new
         mesh with its original spec — the IMap's virtual partitions migrating
         to the new member set.  Logical content is unchanged; only device
-        placement moves.  Entry leading dims must divide the new member
-        count (entities are padded via ``pad_to_shards`` at creation).
-        Returns the number of entries re-homed."""
+        placement moves.  Entries whose leading dim does not divide the new
+        member count (entities are normally padded via ``pad_to_shards`` at
+        creation, but a dispatcher-streamed grid may hold odd-shaped
+        intermediates) fall back to REPLICATED placement instead of failing
+        the whole scale event; the downgrade is recorded in
+        ``self.downgraded`` and automatically REVERSED by a later remesh
+        whose member count divides the entry again.  Returns the number of
+        entries re-homed."""
         self.mesh = mesh
         for name, e in list(self._store.items()):
-            value = jax.device_put(e.value, self._sharding(e.spec))
+            spec = e.spec
+            original = self.downgraded.get(name)
+            if (original is not None
+                    and e.value.shape[0] % self.n_members == 0):
+                spec = original              # geometry fits again: re-shard
+                del self.downgraded[name]
+            if (spec and len(spec) > 0 and spec[0] == self.axis
+                    and e.value.shape[0] % self.n_members != 0):
+                self.downgraded[name] = spec
+                spec = P(*([None] * e.value.ndim))
+            value = jax.device_put(e.value, self._sharding(spec))
             # backups are neighbor-rolled by the OLD shard size — rebuild
             # them for the new member count, else fail-over would restore a
             # stale-offset shard
             backup = None if e.backup is None else self._make_backup(value)
             self._store[name] = dataclasses.replace(e, value=value,
-                                                    backup=backup)
+                                                    backup=backup, spec=spec)
         return len(self._store)
 
     def replicate(self, name: str) -> jax.Array:

@@ -1,14 +1,27 @@
 """MapReduce engine — the paper's dual-backend MapReduce layer (§3.4.2, §4.2).
 
 Cloud²Sim implements the SAME job API over Hazelcast and Infinispan and
-benchmarks them against each other (Figs 5.9–5.11).  We keep that design:
+benchmarks them against each other (Figs 5.9–5.11).  We keep that design,
+but both backends now execute as jobs on the unified ``ElasticDispatcher``
+middleware (``core/dispatch.py``):
 
-  backend="hazelcast"   explicit shard_map: map() runs on each member's local
-                        chunk, reduce() is an explicit collective (psum) —
-                        the member-owned, logic-to-data execution model.
-  backend="infinispan"  pjit/auto-SPMD: the same job expressed as a global
-                        computation; the partitioner chooses the schedule
-                        (Infinispan's "local-first cache" flavor).
+  backend="hazelcast"   a ``member_fn`` dispatch job: map() runs on each
+                        member's local chunk, reduce() is an explicit
+                        collective (psum) — the member-owned, logic-to-data
+                        execution model.
+  backend="infinispan"  a ``global_fn`` dispatch job: the same job expressed
+                        as a global computation; the partitioner chooses the
+                        schedule (Infinispan's "local-first cache" flavor).
+
+Because the job layer is the dispatcher, MapReduce gains what the thesis's
+§5 dynamic scaler promised: chunked streaming of corpora larger than one
+dispatch, and ADAPTIVE SCALING — the IntelligentAdaptiveScaler can grow or
+shrink the member set between chunks and the stream resumes on the new
+mesh.  Word count reduces in int32, so results are BIT-identical for any
+member count, chunking, or mid-stream scale event (both backends agree
+exactly — the thesis's accuracy claim, now at the MapReduce layer too).
+The old ``n_files % members == 0`` restriction is gone: the dispatcher pads
+chunks to whole shards and masks the padding out of the reduction.
 
 Jobs follow the paper's default example: word count over a corpus of files.
 ``map_invocations`` = number of files (leading shard dim); ``reduce
@@ -18,16 +31,15 @@ thesis scales its experiments (§4.2.3).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core.compat import shard_map
+from repro.core.dispatch import DispatchJob, ElasticDispatcher
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,58 +68,82 @@ def word_count_job(vocab: int, use_kernel: bool = False) -> MapReduceJob:
 
 
 class MapReduceEngine:
-    def __init__(self, mesh: Mesh, backend: str = "hazelcast",
-                 axis: str = "data", verbose: bool = False):
+    """Dual-backend MapReduce as dispatcher jobs.
+
+    Construct either from a fixed 1-D ``mesh`` (legacy API — wraps a FROZEN
+    dispatcher, no elasticity) or from an ``ElasticDispatcher`` (the
+    middleware path: chunked streaming + IAS adaptive scaling between
+    chunks).
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None, backend: str = "hazelcast",
+                 axis: str = "data", verbose: bool = False,
+                 dispatcher: Optional[ElasticDispatcher] = None):
         assert backend in ("hazelcast", "infinispan")
-        self.mesh = mesh
+        if dispatcher is None:
+            if mesh is None:
+                raise ValueError("MapReduceEngine needs a mesh or a "
+                                 "dispatcher")
+            dispatcher = ElasticDispatcher.for_mesh(mesh, axis=axis)
+        self.dispatcher = dispatcher
         self.backend = backend
-        self.axis = axis
+        self.axis = dispatcher.axis
         self.verbose = verbose
+        self.last_report = None          # DispatchReport of the latest run
 
-    def run(self, job: MapReduceJob, files: jax.Array):
-        """files: (n_files, file_len) int tokens; n_files % members == 0."""
-        if self.backend == "hazelcast":
-            out = self._run_hazelcast(job, files)
-        else:
-            out = self._run_infinispan(job, files)
-        return out
+    @property
+    def mesh(self) -> Mesh:
+        return self.dispatcher.mesh      # tracks scale events
 
-    # -------- hazelcast backend: explicit member-local map + collective reduce
-    def _run_hazelcast(self, job: MapReduceJob, files):
-        axis = self.axis
+    def run(self, job: MapReduceJob, files: jax.Array, *,
+            chunk: Optional[int] = None, on_chunk: Optional[Callable] = None):
+        """files: (n_files, file_len) int tokens.  ``chunk`` streams the
+        corpus ``chunk`` files per dispatch (None = one dispatch); the IAS
+        may re-home the stream between chunks (``on_chunk`` feeds load).
+        ``files`` is left as-is: the dispatcher slices chunks host-side, so
+        forcing a device array here would only add a D2H round-trip."""
+        out, report = self.dispatcher.submit(
+            self._dispatch_job(job), files, chunk=chunk, on_chunk=on_chunk)
+        self.last_report = report
+        return jnp.asarray(out)
+
+    def _dispatch_job(self, job: MapReduceJob) -> DispatchJob:
+        """The MapReduce job as a dispatch descriptor.  ``map_fn`` itself is
+        part of the signature: a fresh closure never reuses another job's
+        executable, while repeated runs of the SAME job object hit the
+        compile cache."""
         verbose = self.verbose
+        sig = ("mapreduce", self.backend, job.name, job.n_keys, job.map_fn)
 
-        def member(local_files):
-            # map(): one invocation per local file
-            partial = jax.vmap(job.map_fn)(local_files).sum(axis=0)
-            if verbose:
-                jax.debug.print(
-                    "[member] mapped {} files locally", local_files.shape[0])
-            # reduce(): collective combine of partial aggregates
-            return jax.lax.psum(partial, axis)
+        if self.backend == "hazelcast":
+            # explicit member-local map + collective reduce (psum)
+            def member_fn(local_files, valid, *_):
+                counts = jax.vmap(job.map_fn)(local_files)   # one per file
+                if verbose:
+                    jax.debug.print("[member] mapped {} files locally",
+                                    local_files.shape[0])
+                counts = jnp.where(valid[:, None], counts, 0)
+                return counts.sum(axis=0)
 
-        f = shard_map(member, mesh=self.mesh, in_specs=(P(axis),),
-                      out_specs=P(), check_vma=False)
-        return jax.jit(f)(files)
+            return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
+                               member_fn=member_fn, reduce="sum")
 
-    # -------- infinispan backend: global expression, auto-SPMD partitioning
-    def _run_infinispan(self, job: MapReduceJob, files):
-        sharding = NamedSharding(self.mesh, P(self.axis))
-        files = jax.device_put(files, sharding)
+        # infinispan: one global expression, auto-SPMD partitioning
+        def global_fn(files, valid, *_):
+            counts = jax.vmap(job.map_fn)(files)
+            return jnp.where(valid[:, None], counts, 0).sum(axis=0)
 
-        def global_job(fs):
-            return jax.vmap(job.map_fn)(fs).sum(axis=0)
+        return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
+                           global_fn=global_fn, reduce="sum")
 
-        return jax.jit(global_job, in_shardings=(sharding,),
-                       out_shardings=NamedSharding(self.mesh, P()))(files)
-
-    def benchmark(self, job: MapReduceJob, files, repeats: int = 3):
+    def benchmark(self, job: MapReduceJob, files, repeats: int = 3, *,
+                  chunk: Optional[int] = None):
         """Timed run (compile excluded) -> (result, seconds)."""
-        out = self.run(job, files)
+        out = self.run(job, files, chunk=chunk)
         jax.block_until_ready(out)
         t0 = time.perf_counter()
         for _ in range(repeats):
-            out = self.run(job, files)
+            out = self.run(job, files, chunk=chunk)
         jax.block_until_ready(out)
         return out, (time.perf_counter() - t0) / repeats
 

@@ -85,11 +85,22 @@ class PartitionTable:
         parts = np.arange(n_keys, dtype=np.int64) % self.partition_count
         return self.owner[parts].astype(np.int32)
 
-    def rebalance(self, n_instances: int) -> int:
+    def rebalance(self, n_instances: int, weights=None) -> int:
         """Returns the number of virtual partitions that moved (kept minimal:
-        only partitions on departed or overfull members re-home)."""
+        only partitions on departed or overfull members re-home).
+
+        ``weights`` (optional, length ``partition_count``) makes the
+        rebalance LOCALITY-AWARE: members level by total partition *weight*
+        instead of partition count.  The dispatcher passes observed per-key
+        load (e.g. the scan core's ``exchange_load``) through
+        ``partition_weights_from_keys`` so a hot key's partition stops
+        dragging a full share of cold partitions onto its member.  With
+        ``weights=None`` the exact count-leveling behavior (and its minimal-
+        movement bound) is unchanged."""
         if n_instances < 1:
             raise ValueError(f"n_instances must be >= 1, got {n_instances}")
+        if weights is not None:
+            return self._rebalance_weighted(n_instances, weights)
         counts = np.bincount(self.owner[self.owner < n_instances],
                              minlength=n_instances)
         moved = 0
@@ -114,8 +125,69 @@ class PartitionTable:
         self.n_instances = n_instances
         return moved
 
+    def _rebalance_weighted(self, n_instances: int, weights) -> int:
+        """Weighted leveling: greedy longest-processing-time moves from the
+        heaviest member to the lightest while the move strictly shrinks the
+        load spread.  Zero-weight partitions carry a tiny uniform epsilon so
+        they still spread out instead of piling anywhere for free."""
+        w = np.maximum(np.asarray(weights, np.float64), 0.0)
+        if w.shape != (self.partition_count,):
+            raise ValueError(f"weights must have shape "
+                             f"({self.partition_count},), got {w.shape}")
+        w = w + max(w.sum(), 1.0) / (self.partition_count * 100.0)
+        load = np.zeros(n_instances, np.float64)
+        np.add.at(load, self.owner[self.owner < n_instances],
+                  w[self.owner < n_instances])
+        moved = 0
+        # 1) forced: departed members' partitions, heaviest first, onto the
+        # currently lightest member
+        departed = np.nonzero(self.owner >= n_instances)[0]
+        for p in departed[np.argsort(-w[departed])]:
+            dst = int(np.argmin(load))
+            self.owner[p] = dst
+            load[dst] += w[p]
+            moved += 1
+        # 2) level by weight: fill the lightest member from the heaviest
+        # source that can improve (a member whose only partition is an
+        # irreducibly hot one is skipped, not a stopping point), picking the
+        # partition whose weight best halves the src→dst gap; stop when no
+        # move improves the spread
+        for _ in range(4 * self.partition_count):
+            dst = int(np.argmin(load))
+            best = None
+            for src in map(int, np.argsort(-load)):
+                gap = load[src] - load[dst]
+                if src == dst or gap <= 0:
+                    break                  # no heavier source can improve
+                cand = np.nonzero(self.owner == src)[0]
+                ok = cand[w[cand] < gap]   # strictly reduces the spread
+                if ok.size:
+                    best = (src, int(ok[np.argmin(np.abs(gap - 2.0 * w[ok]))]))
+                    break
+            if best is None:
+                break
+            src, p = best
+            self.owner[p] = dst
+            load[src] -= w[p]
+            load[dst] += w[p]
+            moved += 1
+        self.n_instances = n_instances
+        return moved
+
     def load(self) -> np.ndarray:
         return np.bincount(self.owner, minlength=self.n_instances)
+
+
+def partition_weights_from_keys(key_weights,
+                                partition_count: int = DEFAULT_PARTITION_COUNT
+                                ) -> np.ndarray:
+    """Aggregate observed per-key load (int keys 0..n-1, the VM ids of
+    ``owners_of_range``) into per-virtual-partition weights for
+    ``PartitionTable.rebalance(..., weights=...)``."""
+    kw = np.asarray(key_weights, np.float64)
+    out = np.zeros(partition_count, np.float64)
+    np.add.at(out, np.arange(kw.shape[0]) % partition_count, kw)
+    return out
 
 
 def pad_to_shards(n: int, shards: int) -> int:

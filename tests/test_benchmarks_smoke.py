@@ -1,0 +1,30 @@
+"""Benchmark-suite smoke: ``benchmarks/run.py --smoke`` runs EVERY benchmark
+module at toy sizes (2 emulated devices, no BENCH files written), so the
+benchmark scripts can't silently bit-rot while only the library under them
+is tested.  A module failure exits non-zero and prints ``<mod>,FAILED``."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_benchmark_smoke_runs_every_module(tmp_path):
+    before = {f: os.path.getmtime(os.path.join(ROOT, f))
+              for f in os.listdir(ROOT) if f.startswith("BENCH_")}
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks", "run.py"),
+         "--smoke"],
+        capture_output=True, text=True, timeout=1500, cwd=str(tmp_path))
+    out = r.stdout
+    assert r.returncode == 0, out + r.stderr
+    assert "smoke OK" in out, out + r.stderr
+    assert ",FAILED," not in out, out
+    # every module emitted at least one line (one representative name each)
+    for tag in ("t5.1/", "core/", "grid/", "dist/", "f5.1/", "f5.4/",
+                "f5.9/", "t5.2/", "model/", "serve/"):
+        assert tag in out, (tag, out)
+    # --smoke must never touch the committed BENCH artifacts
+    after = {f: os.path.getmtime(os.path.join(ROOT, f))
+             for f in os.listdir(ROOT) if f.startswith("BENCH_")}
+    assert before == after

@@ -250,6 +250,46 @@ def test_batch_grid_matches_unbatched_scan():
                                    rtol=1e-6, atol=0)
 
 
+def test_batch_grid_topology_and_loaded_axes():
+    """The datacenter-topology and ``is_loaded`` axes (ROADMAP): topology 0
+    is a bit-exact no-op, topologies genuinely change outcomes, the workload
+    checksum is nonzero exactly for loaded variants, and shape padding keeps
+    padded cloudlets at finish EXACTLY 0 under both axes."""
+    cfg = SimulationConfig(n_vms=12, n_cloudlets=64, workload_dim=4,
+                           workload_iters_per_gmi=0.02)
+    grid = make_scenario_grid(seeds=[3, 9], cloudlet_counts=[40, 64],
+                              dc_counts=[0, 2, 5], loaded=[0, 1])
+    r = run_scenario_grid(cfg, grid)
+    B = r.n_scenarios
+    assert B == 2 * 2 * 3 * 2
+    # flat (0) topology == the axis-free grid, bitwise
+    flat = np.asarray(grid["n_datacenters"]) == 0
+    base = make_scenario_grid(seeds=[3, 9], cloudlet_counts=[40, 64])
+    r0 = run_scenario_grid(cfg, base)
+    np.testing.assert_array_equal(r.finish_times[flat],
+                                  np.repeat(r0.finish_times, 2, axis=0))
+    # differing topologies genuinely change makespans
+    m2 = r.makespans[np.asarray(grid["n_datacenters"]) == 2]
+    m5 = r.makespans[np.asarray(grid["n_datacenters"]) == 5]
+    assert not np.array_equal(m2, m5)
+    # workload checksum: nonzero iff loaded; finish times untouched by it
+    loaded = np.asarray(grid["is_loaded"]) == 1
+    assert (r.workload_checksum[~loaded] == 0.0).all()
+    assert (r.workload_checksum[loaded] != 0.0).all()
+    np.testing.assert_array_equal(r.finish_times[loaded],
+                                  r.finish_times[~loaded])
+    # padded rows keep finish exactly 0 under every axis combination
+    for b in range(B):
+        nc = int(r.n_cloudlets[b])
+        assert (r.finish_times[b, nc:] == 0.0).all(), b
+        assert (r.finish_times[b, :nc] > 0.0).all(), b
+    # axis bounds are validated, not silently clamped
+    with pytest.raises(ValueError):
+        run_simulation_batch(cfg, np.arange(2), n_datacenters=[0, 99])
+    with pytest.raises(ValueError):
+        run_simulation_batch(cfg, np.arange(2), is_loaded=[0, 2])
+
+
 def test_batch_grid_sharded_across_members():
     # the multi-member batched path (scenario vmap inside the partitioned
     # member_fn) matches the single-member batch, including the B % n pad

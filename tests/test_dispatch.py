@@ -1,0 +1,375 @@
+"""ElasticDispatcher — the unified remesh-aware, chunk-streaming job layer.
+
+Acceptance contract of the middleware refactor:
+
+  * a scenario grid and a MapReduce word-count job submitted through the
+    dispatcher survive a mid-stream scale-out 1→2→4 and scale-in 4→2 with
+    results BIT-identical to a single-member run;
+  * a grid with more variants than one dispatch chunk streams in ≥2 chunks
+    with at most ONE compile per (geometry, job-signature) — verified via
+    the CompileCache hit/build counters;
+  * the elastic simulation cluster is a thin client of the dispatcher;
+  * ``PartitionTable.rebalance`` with observed per-key weights spreads a hot
+    key's partition load across members (locality-aware rebalance seed).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.dispatch import CompileCache, DispatchJob, ElasticDispatcher
+from repro.core.partition import (DEFAULT_PARTITION_COUNT, PartitionTable,
+                                  partition_weights_from_keys)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ----------------------------------------------------------- CompileCache
+
+def test_compile_cache_lru_and_counters():
+    c = CompileCache(max_entries=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1                  # hit moves "a" to the back
+    c.put("c", 3)                           # evicts "b" (LRU front)
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.get("b") is None               # miss
+    assert c.stats() == {"size": 2, "hits": 1, "misses": 1, "builds": 3}
+    # dict-style peeking doesn't disturb recency or counters
+    assert c["a"] == 1 and len(c) == 2 and set(c) == {"a", "c"}
+    assert c.stats()["hits"] == 1
+    built = []
+    v = c.get_or_build("a", lambda: built.append(1) or 99)
+    assert v == 1 and not built             # cached: builder never ran
+    v = c.get_or_build("d", lambda: 42)
+    assert v == 42 and c["d"] == 42
+
+
+def test_compile_cache_invalidate_by_predicate():
+    c = CompileCache()
+    c.put(("m1", "x"), 1)
+    c.put(("m1", "y"), 2)
+    c.put(("m2", "x"), 3)
+    assert c.invalidate(lambda k: k[0] == "m1") == 2
+    assert set(c) == {("m2", "x")}
+    assert c.invalidate() == 1 and len(c) == 0
+
+
+def test_dispatch_job_validation():
+    with pytest.raises(ValueError):
+        DispatchJob(name="x", signature="x")              # no fn
+    with pytest.raises(ValueError):
+        DispatchJob(name="x", signature="x", member_fn=lambda *a: a,
+                    global_fn=lambda *a: a)               # both fns
+    with pytest.raises(ValueError):
+        DispatchJob(name="x", signature="x", member_fn=lambda *a: a,
+                    reduce="median")
+
+
+# ------------------------------------------------- chunk-streamed submission
+
+def test_grid_streams_chunks_with_one_compile():
+    """≥2 chunks through one geometry: exactly ONE executable built, every
+    later chunk a cache hit; a re-submit is all hits — the cache-hit-counter
+    acceptance criterion on a single member."""
+    from repro.core.cloudsim import SimulationConfig
+    from repro.core.des_scan import make_scenario_grid, run_scenario_grid
+
+    cfg = SimulationConfig(n_vms=8, n_cloudlets=32)
+    grid = make_scenario_grid(seeds=range(10), mi_scales=[0.5, 2.0])
+    B = len(grid["seeds"])
+    ref = run_scenario_grid(cfg, grid)
+
+    d = ElasticDispatcher(start_members=1)
+    r = run_scenario_grid(cfg, grid, dispatcher=d, chunk=6)
+    assert r.dispatch["n_chunks"] == -(-B // 6) >= 2
+    assert r.dispatch["compiles"] == 1
+    assert r.dispatch["cache_hits"] == r.dispatch["n_chunks"] - 1
+    np.testing.assert_array_equal(ref.finish_times, r.finish_times)
+    np.testing.assert_array_equal(ref.makespans, r.makespans)
+
+    r2 = run_scenario_grid(cfg, grid, dispatcher=d, chunk=6)
+    assert r2.dispatch["compiles"] == 0
+    assert r2.dispatch["cache_hits"] == r2.dispatch["n_chunks"]
+    np.testing.assert_array_equal(ref.makespans, r2.makespans)
+
+
+def test_submit_validates_items():
+    d = ElasticDispatcher(start_members=1)
+    job = DispatchJob(name="j", signature="j",
+                      member_fn=lambda x, v, *_: x, reduce="concat")
+    with pytest.raises(ValueError):
+        d.submit(job, ())
+    with pytest.raises(ValueError):
+        d.submit(job, (np.zeros(4), np.zeros(5)))   # ragged leading dims
+
+
+def test_submit_empty_batch():
+    """B = 0 must behave like the non-dispatcher vmap path: empty concat
+    outputs with the right trailing shape, identity (zeros) sum outputs —
+    one fully-padded all-invalid chunk, never a crash."""
+    import jax.numpy as jnp
+
+    d = ElasticDispatcher(start_members=1)
+    job = DispatchJob(name="rows", signature="rows",
+                      member_fn=lambda x, v, *_: x * 2.0, reduce="concat")
+    out, rep = d.submit(job, np.zeros((0, 3), np.float32))
+    assert out.shape == (0, 3) and rep.n_chunks == 1
+
+    sum_job = DispatchJob(
+        name="hist", signature="hist", reduce="sum",
+        member_fn=lambda x, v, *_: jnp.where(v[:, None], x, 0).sum(axis=0))
+    out, _ = d.submit(sum_job, np.ones((0, 5), np.int32))
+    assert out.shape == (5,) and (np.asarray(out) == 0).all()
+
+    # the dispatcher-routed grid matches the vmap path on an empty seed set
+    from repro.core.cloudsim import SimulationConfig
+    from repro.core.des_scan import run_simulation_batch
+    cfg = SimulationConfig(n_vms=8, n_cloudlets=16)
+    r = run_simulation_batch(cfg, np.zeros((0,), np.int32), dispatcher=d)
+    assert r.finish_times.shape == (0, 16) and r.makespans.shape == (0,)
+
+
+def test_grid_and_mapreduce_survive_scale_events():
+    """THE acceptance test: scenario grid + MapReduce word count streamed
+    through one dispatcher, IAS firing 1→2→4→2 between chunks, results
+    bit-identical to the single-member run; compile counters show one
+    executable per (geometry, job-signature)."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.dispatch import ElasticDispatcher
+from repro.core.cloudsim import SimulationConfig
+from repro.core.des_scan import make_scenario_grid, run_scenario_grid
+from repro.core.health import HealthConfig
+from repro.core.mapreduce import MapReduceEngine, make_corpus, word_count_job
+
+hc = HealthConfig(target_step_time=1.0, max_threshold=0.8, min_threshold=0.2,
+                  time_between_scaling=1, window=1, max_instances=4)
+cfg = SimulationConfig(n_vms=12, n_cloudlets=48, broker="matchmaking")
+grid = make_scenario_grid(seeds=range(6), mi_scales=[0.7, 1.3],
+                          vm_counts=[6, 12])
+B = len(grid["seeds"])
+ref = run_scenario_grid(cfg, grid)                 # single-member oracle
+
+def loads_feeder(seq):
+    it = iter(seq)
+    def on_chunk(disp, ci, n):
+        l = next(it, None)
+        if l is not None:
+            disp.observe_load(l)
+    return on_chunk
+
+d = ElasticDispatcher(health_cfg=hc, start_members=1)
+r = run_scenario_grid(cfg, grid, dispatcher=d, chunk=6,
+                      on_chunk=loads_feeder([2.0, 2.0, 0.05]))
+assert r.dispatch["members_per_chunk"] == [1, 2, 4, 2], r.dispatch
+assert r.dispatch["n_chunks"] == 4 and r.dispatch["scale_events"] == 3
+# bit-identical across the whole scale path
+assert np.array_equal(ref.finish_times, r.finish_times)
+assert np.array_equal(ref.makespans, r.makespans)
+assert np.array_equal(ref.vm_assign, r.vm_assign)
+# one compile per geometry visited (2-member mesh was retired at 2->4 and
+# recompiled on the way back down: 1, 2, 4, 2 -> 4 builds, 0 hits)
+assert r.dispatch["compiles"] == 4, r.dispatch
+# each scale event retired the old geometry's grid-job executable
+assert [ev["retired_jobs"] for ev in d.scale_events] == [1, 1, 1]
+
+# stay at 2 members, stream again: chunk 3 of the first stream already
+# rebuilt the 2-member executable (after 4->2), so this is ALL cache hits
+r2 = run_scenario_grid(cfg, grid, dispatcher=d, chunk=6)
+assert r2.dispatch["members_per_chunk"] == [2, 2, 2, 2]
+assert r2.dispatch["compiles"] == 0 and r2.dispatch["cache_hits"] == 4
+assert np.array_equal(ref.makespans, r2.makespans)
+
+# ---- MapReduce word count through the SAME middleware, same scale path
+d2 = ElasticDispatcher(health_cfg=hc, start_members=1)
+corpus = make_corpus(10, 512, vocab=64)
+expected = np.bincount(corpus.reshape(-1), minlength=64)
+for backend in ("hazelcast", "infinispan"):
+    eng = MapReduceEngine(backend=backend, dispatcher=ElasticDispatcher(
+        health_cfg=hc, start_members=1))
+    out = eng.run(word_count_job(64), jnp.asarray(corpus), chunk=3,
+                  on_chunk=loads_feeder([2.0, 2.0, 0.05]))
+    rep = eng.last_report
+    assert rep.members_per_chunk == [1, 2, 4, 2], (backend, rep)
+    assert np.array_equal(np.asarray(out), expected), backend
+
+# DataGrid entries with a leading dim the new member count can't divide are
+# downgraded to replicated placement instead of failing the scale event —
+# and re-sharded automatically once a later remesh fits them again
+from repro.core.grid import DataGrid
+d3 = ElasticDispatcher(health_cfg=hc, start_members=2)
+g = d3.ensure_grid()
+g.put("odd", jnp.arange(6.0))                      # 6 % 4 != 0
+sharded_spec = g.spec("odd")
+d3.observe_load(2.0)                               # 2 -> 4 members
+assert d3.n_members == 4
+assert np.array_equal(np.asarray(g.get("odd")), np.arange(6.0))
+assert "odd" in g.downgraded
+d3.observe_load(0.05)                              # 4 -> 2: fits again
+assert d3.n_members == 2
+assert "odd" not in g.downgraded
+assert g.spec("odd") == sharded_spec               # sharding restored
+assert np.array_equal(np.asarray(g.get("odd")), np.arange(6.0))
+# a put() AFTER a downgrade is authoritative: the stale record must not
+# resurrect the old sharded spec on the next remesh
+from jax.sharding import PartitionSpec as P
+d3.observe_load(2.0)                               # 2 -> 4: downgrade again
+assert "odd" in g.downgraded
+g.put("odd", jnp.arange(8.0), spec=P())            # caller wants REPLICATED
+d3.observe_load(0.05)                              # 4 -> 2
+assert g.spec("odd") == P(), g.spec("odd")
+# fail-over after a downgrade remesh: the entry's backup is the DEGENERATE
+# (full replicated) copy — restore must NOT unroll it as if neighbor-rolled
+from jax.sharding import Mesh
+g2 = DataGrid(Mesh(np.array(jax.devices()[:2]), ("data",)), backup_count=1)
+g2.put("six", jnp.arange(6.0))                     # 6 % 2 == 0: rolled
+g2.remesh(Mesh(np.array(jax.devices()[:4]), ("data",)))  # 6 % 4: downgrade
+assert "six" in g2.downgraded
+restored = g2.restore_from_backup("six", lost_member=0)
+assert np.array_equal(np.asarray(restored), np.arange(6.0)), restored
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_auto_block_cache_writes_only_on_measurement():
+    """Steady-state auto-capacity hits must not rewrite the block cache:
+    only the first call measures (one miss, one metadata write that does
+    NOT count as an executable build), later calls hit — churn-free
+    counters stay meaningful."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import des_scan
+    from repro.core.executor import DistributedExecutor
+
+    des_scan.invalidate_dist_core()
+    ex = DistributedExecutor(Mesh(np.array(jax.devices()[:1]), ("data",)))
+    args = (jnp.zeros(16, jnp.int32), jnp.ones(16), jnp.ones(4),
+            jnp.ones(16, bool))
+    cache = des_scan._AUTO_BLOCK_CACHE
+    b0, h0, m0 = cache.builds, cache.hits, cache.misses
+    for _ in range(3):                      # 1 measurement + 2 cached hits
+        des_scan.simulate_completion_distributed(*args, ex)
+    assert cache.builds == b0                 # metadata, not an executable
+    assert cache.misses == m0 + 1 and cache.hits == h0 + 2
+    des_scan.invalidate_dist_core()
+
+
+def test_cluster_rejects_conflicting_topology_kwargs():
+    from repro.core.cloudsim import ElasticSimulationCluster
+
+    d = ElasticDispatcher(start_members=1)
+    with pytest.raises(ValueError):
+        ElasticSimulationCluster(dispatcher=d, start_members=2)
+    with pytest.raises(ValueError):
+        from repro.core.health import HealthConfig
+        ElasticSimulationCluster(dispatcher=d, health_cfg=HealthConfig())
+
+
+def test_elastic_cluster_is_thin_dispatcher_client():
+    """The cluster owns NO topology of its own: table, controller, mesh,
+    executor, grid, entity_pad and scale_events all live in the dispatcher."""
+    from repro.core.cloudsim import ElasticSimulationCluster
+
+    cl = ElasticSimulationCluster(start_members=1)
+    d = cl.dispatcher
+    assert isinstance(d, ElasticDispatcher)
+    assert cl.table is d.table
+    assert cl.controller is d.controller
+    assert cl.mesh is d.mesh
+    assert cl.executor is d.executor
+    assert cl.entity_pad == d.entity_pad
+    assert cl.scale_events is d.scale_events
+    assert cl.n_members == d.n_members
+    assert np.array_equal(np.asarray(cl.vm_owner(8)),
+                          np.asarray(d.vm_owner(8)))
+    # an externally-built dispatcher can be shared with the cluster
+    cl2 = ElasticSimulationCluster(dispatcher=d)
+    assert cl2.dispatcher is d
+
+
+# ------------------------------------------- locality-aware rebalance (seed)
+
+def test_weighted_rebalance_spreads_hot_vm():
+    """A hot VM (huge observed exchange_load) must not drag a full share of
+    cold partitions onto its member: weighted leveling gives the hot
+    partition's owner far FEWER partitions than the balanced count, while
+    total weighted load stays near-balanced."""
+    n_keys, n_members = DEFAULT_PARTITION_COUNT, 4
+    key_w = np.ones(n_keys)
+    hot_key = 17
+    key_w[hot_key] = 300.0                 # one hot VM
+    w = partition_weights_from_keys(key_w)
+    assert w.shape == (DEFAULT_PARTITION_COUNT,)
+    assert w[hot_key % DEFAULT_PARTITION_COUNT] == 300.0
+
+    pt = PartitionTable(n_instances=1)
+    moved = pt.rebalance(n_members, weights=w)
+    assert moved > 0
+    assert (pt.owner >= 0).all() and (pt.owner < n_members).all()
+    hot_owner = pt.owner[hot_key % DEFAULT_PARTITION_COUNT]
+    counts = np.bincount(pt.owner, minlength=n_members)
+    balanced = DEFAULT_PARTITION_COUNT // n_members
+    # the hot member carries far fewer partitions than a count-balanced table
+    assert counts[hot_owner] < balanced // 2, counts
+    # ... and weighted loads are leveled AROUND the irreducible hot
+    # partition: the hot member takes almost nothing on top of it, while the
+    # cold members split the remaining weight evenly
+    loads = np.zeros(n_members)
+    np.add.at(loads, pt.owner, w)
+    assert loads[hot_owner] <= 300.0 * 1.1, loads
+    cold = np.delete(loads, hot_owner)
+    assert cold.max() - cold.min() <= 0.2 * cold.mean(), loads
+    # unweighted rebalance (the default) still levels by COUNT
+    pt2 = PartitionTable(n_instances=1)
+    pt2.rebalance(n_members)
+    c2 = pt2.load()
+    assert c2.max() - c2.min() <= 1
+
+
+def test_weighted_rebalance_validates_and_covers_departures():
+    pt = PartitionTable(n_instances=4)
+    with pytest.raises(ValueError):
+        pt.rebalance(2, weights=np.ones(3))        # wrong shape
+    w = np.ones(DEFAULT_PARTITION_COUNT)
+    pt.rebalance(2, weights=w)                     # departed members re-home
+    assert (pt.owner < 2).all()
+    # uniform weights behave like count-leveling (spread stays tight)
+    load = pt.load()
+    assert load.max() - load.min() <= DEFAULT_PARTITION_COUNT // 20
+
+
+def test_dispatcher_observe_key_weights_feeds_remesh():
+    """After ``observe_key_weights``, the next scale event rebalances by
+    weight: the hot key's member ends up with a small partition count."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import numpy as np
+from repro.core.dispatch import ElasticDispatcher
+from repro.core.health import HealthConfig
+
+hc = HealthConfig(target_step_time=1.0, max_threshold=0.8, min_threshold=0.2,
+                  time_between_scaling=1, window=1, max_instances=2)
+d = ElasticDispatcher(start_members=1, health_cfg=hc)
+key_w = np.ones(100)
+key_w[3] = 500.0                                   # VM 3 is hot
+d.observe_key_weights(key_w)
+d.observe_load(2.0)                                # scale out 1 -> 2
+assert d.n_members == 2, d.n_members
+owner = np.asarray(d.vm_owner(100))
+hot_member = owner[3]
+loads = np.zeros(2)
+np.add.at(loads, owner, key_w)
+counts = np.bincount(owner, minlength=2)
+# weighted load near-balanced => the hot member holds few other keys
+assert counts[hot_member] < counts[1 - hot_member], (counts, loads)
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=600)
+    assert "OK" in r.stdout, r.stdout + r.stderr
