@@ -64,26 +64,82 @@ def bench_grid(B: int, executor=None, n_vms=N_VMS, n_cloudlets=N_CLOUDLETS):
                      "mi_scales": 2}}
 
 
+def _stream_entry(B, chunk, n_vms, n_cloudlets, members, mode, wall, rep):
+    """One streamed-dispatch BENCH entry (shared by the single-member
+    stream bench and the paired sync/async measurement)."""
+    emit(f"grid/B{B}/{mode}", wall * 1e6,
+         f"{B / wall:.0f} scenarios/s;chunks={rep['n_chunks']};"
+         f"compiles={rep['compiles']};ahead={rep['dispatch_ahead']}")
+    return {"n_scenarios": B, "n_cloudlets": n_cloudlets, "n_vms": n_vms,
+            "mode": mode, "wall_s": wall, "members": members,
+            "chunk": chunk, "dispatch_ahead": rep["dispatch_ahead"],
+            "scenarios_per_s": B / wall, "n_chunks": rep["n_chunks"],
+            "compiles": rep["compiles"], "cache_hits": rep["cache_hits"],
+            "staged_device": rep["staged_device"],
+            "staged_host": rep["staged_host"]}
+
+
 def bench_grid_streamed(B: int, chunk: int, n_vms=N_VMS,
-                        n_cloudlets=N_CLOUDLETS):
+                        n_cloudlets=N_CLOUDLETS, *, dispatch_ahead=2,
+                        members=1):
     """The same grid streamed chunk-by-chunk through the dispatcher: only
     ``chunk`` variants are resident per dispatch (larger-than-memory grids)
-    and the compile cache holds ONE executable for the whole stream."""
+    and the compile cache holds ONE executable for the whole stream.
+
+    ``dispatch_ahead`` selects the pipeline: 0 = ``streamed_sync`` (the
+    pre-async baseline: host-staged items, one blocking step + D2H per
+    chunk), >=1 = ``streamed_async`` (chunk k+1 staged while chunk k
+    computes; the host blocks only at the final reduce).  The async/sync
+    pair at the SAME chunking and member count is the latency-hiding
+    measurement the async dispatch PR is pinned on; both are best-of-3
+    (chunked streams are short, so single-shot walls are noisy on a shared
+    box)."""
     from repro.core.dispatch import ElasticDispatcher
 
     cfg, grid = _make(B, n_vms, n_cloudlets)
-    d = ElasticDispatcher(devices=jax.devices()[:1])
+    d = ElasticDispatcher(devices=jax.devices()[:members],
+                          start_members=members,
+                          dispatch_ahead=dispatch_ahead)
     run_scenario_grid(cfg, grid, dispatcher=d, chunk=chunk)   # compile
-    r = run_scenario_grid(cfg, grid, dispatcher=d, chunk=chunk)
-    wall = r.timings["batch_total"]
-    rep = r.dispatch
-    emit(f"grid/B{B}/stream{chunk}", wall * 1e6,
-         f"{B / wall:.0f} scenarios/s;chunks={rep['n_chunks']};"
-         f"compiles={rep['compiles']}")
-    return {"n_scenarios": B, "n_cloudlets": n_cloudlets, "n_vms": n_vms,
-            "mode": f"stream{chunk}", "wall_s": wall,
-            "scenarios_per_s": B / wall, "n_chunks": rep["n_chunks"],
-            "compiles": rep["compiles"], "cache_hits": rep["cache_hits"]}
+    wall, r = None, None
+    for _ in range(3):
+        ri = run_scenario_grid(cfg, grid, dispatcher=d, chunk=chunk)
+        wi = ri.timings["batch_total"]
+        if wall is None or wi < wall:
+            wall, r = wi, ri
+    return _stream_entry(B, chunk, n_vms, n_cloudlets, members,
+                         f"stream{chunk}", wall, r.dispatch)
+
+
+def bench_streamed_pair(B: int, chunk: int, n_vms, n_cloudlets, members,
+                        reps: int = 4):
+    """``streamed_sync`` vs ``streamed_async`` measured PAIRED: the two
+    modes alternate rep by rep so both sample the same box states, and each
+    keeps its best — on a shared machine whose throughput wobbles between
+    windows, back-to-back blocks would measure the neighbor's load, not the
+    pipeline.  Sync (dispatch_ahead=0) is the legacy path end to end:
+    host-staged items, one blocking D2H per chunk; async overlaps chunk
+    k+1's staging/dispatch with chunk k's compute and synchronizes only at
+    the reduce boundary."""
+    from repro.core.dispatch import ElasticDispatcher
+
+    cfg, grid = _make(B, n_vms, n_cloudlets)
+    modes = {"streamed_sync": 0, "streamed_async": 4}
+    disp = {m: ElasticDispatcher(devices=jax.devices()[:members],
+                                 start_members=members, dispatch_ahead=a)
+            for m, a in modes.items()}
+    best = {}
+    for m in modes:                        # compile both before measuring
+        run_scenario_grid(cfg, grid, dispatcher=disp[m], chunk=chunk)
+    for _ in range(reps):
+        for m in modes:
+            r = run_scenario_grid(cfg, grid, dispatcher=disp[m], chunk=chunk)
+            w = r.timings["batch_total"]
+            if m not in best or w < best[m][0]:
+                best[m] = (w, r)
+    return [_stream_entry(B, chunk, n_vms, n_cloudlets, members, m,
+                          best[m][0], best[m][1].dispatch)
+            for m in modes]
 
 
 def main():
@@ -97,8 +153,14 @@ def main():
         ex = DistributedExecutor(Mesh(np.array(jax.devices()), ("data",)))
         entries += [bench_grid(B, executor=ex, n_vms=n_vms, n_cloudlets=n_cl)
                     for B in sizes]
+    # single-member larger-than-memory streaming (the PR-4 entry)
     entries += [bench_grid_streamed(max(sizes), max(max(sizes) // 4, 1),
                                     n_vms=n_vms, n_cloudlets=n_cl)]
+    # async vs sync pipeline at the SAME chunking on the full device set:
+    # small chunks make the per-chunk dispatch/sync overhead a significant
+    # cost, which is exactly what the dispatch-ahead pipeline hides
+    B = max(sizes)
+    entries += bench_streamed_pair(B, max(B // 32, 1), n_vms, n_cl, n_dev)
     return {"batch_sizes": list(sizes), "n_devices": n_dev,
             "entries": entries}
 

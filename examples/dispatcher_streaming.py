@@ -10,6 +10,15 @@ instance.  Every chunk of a geometry reuses one compiled executable (the
 CompileCache counters prove it) and results are BIT-identical to a
 single-member run — the thesis's "general purpose auto scaler middleware"
 claim, demonstrated.
+
+The stream is an ASYNC, DOUBLE-BUFFERED pipeline: chunk k+1 is staged (on
+device, for device-resident corpora) while chunk k computes, and a scale
+event is a pipeline BARRIER — the dispatcher drains the in-flight chunks
+(watch ``drained_in_flight`` in the scale-event log), rebalances, rebuilds
+the mesh, and resumes, with chunk boundaries and reduce order unchanged.
+Float MapReduce jobs (``word_weight_job``) ride the deterministic tree
+reduction, so even non-associative f32 sums come out bit-identical across
+every member count and scale path.
 """
 import os
 
@@ -42,7 +51,8 @@ def main():
     hc = HealthConfig(target_step_time=1.0, max_threshold=0.8,
                       min_threshold=0.2, time_between_scaling=1, window=1,
                       max_instances=4)
-    dispatcher = ElasticDispatcher(health_cfg=hc, start_members=1)
+    dispatcher = ElasticDispatcher(health_cfg=hc, start_members=1,
+                                   dispatch_ahead=2)   # async double-buffer
 
     # ---- 1. a scenario GRID streamed in chunks across scale events -------
     cfg = SimulationConfig(n_vms=32, n_cloudlets=256, broker="matchmaking")
@@ -51,12 +61,17 @@ def main():
     B = len(grid["seeds"])
     ref = run_scenario_grid(cfg, grid)                 # single-member oracle
     r = run_scenario_grid(cfg, grid, dispatcher=dispatcher, chunk=16,
-                          on_chunk=loads_feeder([2.0, 2.0, 0.05]))
+                          on_chunk=loads_feeder([0.5, 2.0, 0.5, 2.0]))
     rep = r.dispatch
     print(f"grid: {B} variants in {rep['n_chunks']} chunks, members per "
           f"chunk {rep['members_per_chunk']}")
     print(f"      compiles={rep['compiles']} cache_hits={rep['cache_hits']} "
-          f"scale_events={rep['scale_events']}")
+          f"scale_events={rep['scale_events']} "
+          f"max_in_flight={rep['max_in_flight']}")
+    for ev in dispatcher.scale_events:
+        print(f"      remesh barrier -> {ev['n_members']} members: drained "
+              f"{ev['drained_in_flight']} in-flight chunk(s), retired "
+              f"{ev['retired_jobs']} executable(s)")
     assert np.array_equal(ref.finish_times, r.finish_times)
     print("      finish vectors BIT-identical to the single-member run")
 
@@ -70,6 +85,18 @@ def main():
           f"members per chunk {eng.last_report.members_per_chunk}")
     assert np.array_equal(np.asarray(out), expected)
     print("      word count exact vs numpy across the scale path")
+
+    # ---- 2b. FLOAT MapReduce: deterministic tree reduction ---------------
+    from repro.core.mapreduce import word_weight_job
+    w1 = np.asarray(eng.run(word_weight_job(1024), corpus, chunk=4,
+                            on_chunk=loads_feeder([2.0, 0.05])))
+    w2 = np.asarray(MapReduceEngine(
+        backend="infinispan",
+        dispatcher=ElasticDispatcher(start_members=1)).run(
+            word_weight_job(1024), corpus))
+    assert np.array_equal(w1, w2)
+    print("mapreduce: f32 word-weight job bit-identical across backends, "
+          "member counts and the scale path (deterministic tree reduction)")
 
     # ---- 3. the elastic DES cluster as a thin client ---------------------
     cluster = ElasticSimulationCluster(dispatcher=dispatcher)

@@ -272,14 +272,18 @@ class SimulationResult:
 def run_simulation(cfg: SimulationConfig, mesh: Mesh,
                    backup_count: int = 0, *, grid: Optional[DataGrid] = None,
                    executor: Optional[DistributedExecutor] = None,
-                   vm_owner=None, pad_multiple: int = 1) -> SimulationResult:
+                   vm_owner=None, pad_multiple: int = 1,
+                   weight_observer=None) -> SimulationResult:
     """One full simulation on ``mesh``.  ``grid``/``executor`` may be
     supplied by an elastic cluster that re-homes them across scale events
     (caller-owned grids are NOT cleared at the end); ``vm_owner`` is the
     PartitionTable-backed VM→member map for ``core="scan_dist"``;
     ``pad_multiple`` additionally pads entity sizes (see
     ``create_entities``) so elastic runs keep identical shapes across
-    member counts."""
+    member counts; ``weight_observer`` receives the scan core's measured
+    per-VM exchange load (see ``simulate_completion_distributed``) — the
+    elastic cluster passes its dispatcher's ``observe_key_weights`` so the
+    next rebalance is locality-aware with no caller cooperation."""
     own_grid = grid is None
     grid = grid if grid is not None else DataGrid(mesh,
                                                  backup_count=backup_count)
@@ -311,7 +315,8 @@ def run_simulation(cfg: SimulationConfig, mesh: Mesh,
     elif cfg.core == "scan_dist":
         finish, makespan = des_scan.simulate_completion_distributed(
             *core_args, executor, vm_owner=vm_owner, method=cfg.dist_method,
-            slack=cfg.exchange_slack, use_kernel=cfg.use_kernel)
+            slack=cfg.exchange_slack, use_kernel=cfg.use_kernel,
+            weight_observer=weight_observer)
     elif cfg.core == "scan":
         finish, makespan = des_scan.simulate_completion_scan_jit(
             *core_args, use_kernel=cfg.use_kernel)
@@ -430,7 +435,12 @@ class ElasticSimulationCluster:
         shapes — and hence PRNG draws and finish vectors — are BIT-identical
         across scale events for ARBITRARY ``n_vms``/``n_cloudlets``; no
         divisibility requirement.  Results are trimmed back to the
-        configured live entity counts."""
+        configured live entity counts.
+
+        Each run also AUTO-feeds its measured per-VM exchange load into the
+        dispatcher's ``observe_key_weights``, so the next IAS scale event
+        rebalances locality-aware (hot VMs spread across members) with no
+        caller cooperation."""
         if cfg.core != "scan_dist":
             cfg = dataclasses.replace(cfg, core="scan_dist")
         grid = self.dispatcher.ensure_grid()
@@ -439,7 +449,9 @@ class ElasticSimulationCluster:
         r = run_simulation(cfg, self.mesh, grid=grid,
                            executor=self.executor,
                            vm_owner=self.vm_owner(V),
-                           pad_multiple=self.entity_pad)
+                           pad_multiple=self.entity_pad,
+                           weight_observer=(
+                               self.dispatcher.observe_key_weights))
         C = cfg.n_cloudlets
         return dataclasses.replace(
             r, vm_assign=r.vm_assign[:C], finish_times=r.finish_times[:C],

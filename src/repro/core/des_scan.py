@@ -73,7 +73,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, Optional, Sequence, Union
+from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -361,7 +361,9 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
                                     block: Optional[int] = None,
                                     slack: Optional[float] = None,
                                     use_kernel: bool = False,
-                                    interpret: Optional[bool] = None):
+                                    interpret: Optional[bool] = None,
+                                    weight_observer: Optional[
+                                        Callable] = None):
     """Phase 4 distributed: per-VM completion segments are independent, so
     each member owns the finish entries of its VMs — ownership given by a
     ``PartitionTable``-backed VM→member map (``vm_owner``, a (V,) int32
@@ -385,6 +387,14 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
     call transparently retries once at that capacity (one recompile, still
     never a wrong result).
 
+    ``weight_observer`` (optional) AUTO-wires the run's measured per-VM
+    exchange load into locality-aware rebalancing: it is called with the
+    (V,) count of valid cloudlets bound to each VM — exactly the per-key
+    column mass of ``exchange_load`` — so passing a dispatcher's
+    ``observe_key_weights`` makes the NEXT scale event spread hot VMs
+    across members with no caller cooperation (the elastic simulation
+    cluster wires this automatically).
+
     The per-member partials are disjoint and their sum is the full finish
     vector — BIT-identical to ``simulate_completion_scan`` for any member
     count, ownership map, and capacity (the thesis's accuracy claim), so an
@@ -399,6 +409,10 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
     vm_owner = jnp.asarray(vm_owner, jnp.int32)
     if interpret is None and use_kernel:
         interpret = jax.default_backend() != "tpu"
+    if weight_observer is not None:
+        a = np.asarray(vm_assign)
+        live = np.asarray(valid).astype(bool)
+        weight_observer(np.bincount(a[live], minlength=V).astype(np.float64))
 
     if method == "replicated":
         fn = _dist_core_replicated(executor.mesh, executor.axis, V,
@@ -639,7 +653,8 @@ def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
                          n_vms=None, n_cloudlets=None, mips_dist=None,
                          n_datacenters=None, is_loaded=None,
                          executor=None, dispatcher=None, chunk=None,
-                         on_chunk=None) -> BatchSimulationResult:
+                         on_chunk=None,
+                         dispatch_ahead=None) -> BatchSimulationResult:
     """Execute a multi-axis scenario GRID in a SINGLE jitted vmap.
 
     seeds: (B,) int array — one PRNG stream per scenario.  The optional grid
@@ -665,7 +680,10 @@ def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
     ``ElasticDispatcher``) the grid is submitted as a STREAMING job: cut
     into ``chunk``-variant chunks (grids larger than device memory), one
     compile per (geometry, job-signature), surviving IAS scale events
-    between chunks (``on_chunk`` can feed ``observe_load``).  ``cfg.
+    between chunks (``on_chunk`` can feed ``observe_load``); the stream is
+    ASYNC double-buffered — ``dispatch_ahead`` overrides the dispatcher's
+    pipeline depth (0 = synchronous baseline), and the grid axes (jnp
+    arrays) are chunked on DEVICE, never round-tripping to host.  ``cfg.
     use_kernel`` is honored; only the vmappable ``core="scan"`` is
     supported (the wave loop doesn't batch).
     """
@@ -717,8 +735,12 @@ def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
                          "both — the dispatcher owns its own geometry")
     if dispatcher is not None:
         job = scenario_grid_job(cfg, with_workload)
+        # deliver="host": the result dataclass materializes to numpy right
+        # below, so the reduce lands on host directly — one gather, not a
+        # sharded device concat plus a gather
         (assign, finish, makespans, workload), report = dispatcher.submit(
-            job, args, chunk=chunk, on_chunk=on_chunk)
+            job, args, chunk=chunk, on_chunk=on_chunk,
+            dispatch_ahead=dispatch_ahead, deliver="host")
     elif executor is not None and executor.n_members > 1:
         n = executor.n_members
         pad = (-B) % n                   # round B up to a whole shard each
@@ -779,7 +801,8 @@ def make_scenario_grid(seeds: Sequence[int],
 
 def run_scenario_grid(cfg, grid: Dict[str, np.ndarray], *,
                       executor=None, dispatcher=None, chunk=None,
-                      on_chunk=None) -> BatchSimulationResult:
+                      on_chunk=None,
+                      dispatch_ahead=None) -> BatchSimulationResult:
     """Run a ``make_scenario_grid`` product through ``run_simulation_batch``
     (0-valued VM/cloudlet counts resolve to the config's full counts).
     With ``dispatcher``, the grid streams through the elastic dispatch
@@ -797,4 +820,5 @@ def run_scenario_grid(cfg, grid: Dict[str, np.ndarray], *,
     seeds = g.pop("seeds")
     return run_simulation_batch(cfg, seeds, executor=executor,
                                 dispatcher=dispatcher, chunk=chunk,
-                                on_chunk=on_chunk, **g)
+                                on_chunk=on_chunk,
+                                dispatch_ahead=dispatch_ahead, **g)

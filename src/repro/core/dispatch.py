@@ -43,12 +43,27 @@ auto-SPMD path).  ``reduce`` combines chunks: "concat" streams row results,
 "sum"/"max" accumulate associative partials, so integer reductions (e.g. word
 count) are BIT-identical for any member count, chunking, or mid-stream scale
 event — the thesis's accuracy-under-elasticity claim at the job layer.
+``deterministic=True`` extends that guarantee to FLOAT sums: the job emits
+per-row contributions and the dispatcher reduces them with position-aligned
+pairwise trees (rows) plus a fixed-arity tree keyed on chunk index (chunks).
+
+The streaming path is an ASYNC, DOUBLE-BUFFERED pipeline (``dispatch_ahead``
+launched-but-unretired chunks, default 2): chunk k+1 is staged on the host —
+or cut on DEVICE via ``executor.slice_chunk`` when the item set is already
+device-resident — while chunk k computes, and the host blocks only to bound
+the queue, to take the wall-time samples the IAS needs (an EMA of
+retirement-to-retirement step times over a per-job-class calibrated
+``target_step_time``), and at reduce/remesh boundaries.  A scale event is a
+pipeline BARRIER: drain in-flight chunks, rebalance, rebuild, resume — chunk
+boundaries and reduce order never change, so results stay bit-identical no
+matter how many chunks were in flight.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, Dict, Hashable, List, Optional, Tuple
+from typing import Callable, Deque, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -172,6 +187,56 @@ def register_geometry_cache(name: str, cache: CompileCache,
     _GEOMETRY_CACHES.append((name, cache, counts_as_core))
 
 
+# ------------------------------------------------------- reduction primitives
+
+def _row_tree_sum(rows, valid):
+    """Position-aligned pairwise-tree sum over the leading (row) axis.
+
+    Invalid rows are zeroed, the array is zero-padded to the next power of
+    two, and adjacent pairs are combined level by level — the addition tree
+    of row r is a function of r ALONE, never of the padded length.  Because
+    an all-zero subtree contributes an exact ``+0.0`` (x + 0.0 == x), the
+    result is BIT-identical for any pad length >= the live row count, i.e.
+    for any member count's chunk padding.  This is the row-level half of the
+    deterministic float reduction; ``_chunk_tree_reduce`` is the cross-chunk
+    half."""
+    mask_shape = (rows.shape[0],) + (1,) * (rows.ndim - 1)
+    x = jnp.where(valid.reshape(mask_shape), rows, jnp.zeros((), rows.dtype))
+    n = x.shape[0]
+    p2 = 1 if n <= 1 else 1 << (n - 1).bit_length()
+    if p2 != n:
+        x = jnp.concatenate(
+            [x, jnp.zeros((p2 - n,) + x.shape[1:], x.dtype)])
+    while x.shape[0] > 1:
+        x = x[0::2] + x[1::2]
+    return x[0]
+
+
+def _chunk_tree_reduce(parts, combine):
+    """Fixed-arity pairwise combine tree keyed on chunk index (a binary
+    counter: partial subtrees of equal height merge as chunks arrive, the
+    final drain folds survivors highest-level — i.e. earliest chunks —
+    first).  The tree shape depends only on the number of chunks, so float
+    ``reduce="sum"`` streams are deterministic for a given chunking, and —
+    because equal power-of-two chunks form exact subtrees of the global
+    row-aligned tree — bit-identical ACROSS power-of-two chunk sizes.  For
+    int/max reductions the combine is associative and the tree is
+    indistinguishable from the old left fold."""
+    pending: Dict[int, object] = {}
+    for part in parts:
+        level = 0
+        while level in pending:
+            part = jax.tree_util.tree_map(combine, pending.pop(level), part)
+            level += 1
+        pending[level] = part
+    out = None
+    for level in sorted(pending):        # ascending: latest chunks first,
+        # so each fold keeps earlier chunks on the LEFT of the combine
+        out = (pending[level] if out is None
+               else jax.tree_util.tree_map(combine, pending[level], out))
+    return out
+
+
 # ------------------------------------------------------------ job descriptors
 
 @dataclasses.dataclass(frozen=True)
@@ -199,18 +264,36 @@ class DispatchJob:
     ``signature`` is the job's static compile identity: it must determine the
     traced computation completely (the dispatcher may reuse an executable
     built from an earlier ``DispatchJob`` carrying an equal signature).
+
+    ``deterministic`` (``reduce="sum"`` only) changes the fn contract: the
+    job returns PER-ROW contributions (leading dim = rows, like "concat")
+    WITHOUT masking or summing them, and the dispatcher reduces rows itself
+    with a position-aligned pairwise tree (``_row_tree_sum``) and chunks
+    with a fixed-arity tree keyed on chunk index — so FLOAT sums get the
+    same bit-identity guarantee across member counts, mid-stream scale
+    events, and (power-of-two) chunkings that int32 word count has.
+
+    ``target_step_time`` is the job class's IAS calibration: under
+    ``auto_scale`` the dispatcher feeds ``step_time_ema / target`` as the
+    load sample.  ``None`` self-calibrates — the first steady-state sample
+    of the job class is pinned to the neutral midpoint of the scaling
+    thresholds, so only subsequent drift drives the scaler.
     """
     name: str
     signature: Hashable
     member_fn: Optional[Callable] = None
     global_fn: Optional[Callable] = None
     reduce: str = "concat"               # "concat" | "sum" | "max"
+    deterministic: bool = False          # per-row tree-reduced float sum
+    target_step_time: Optional[float] = None   # per-job-class IAS target
 
     def __post_init__(self):
         if (self.member_fn is None) == (self.global_fn is None):
             raise ValueError("exactly one of member_fn/global_fn required")
         if self.reduce not in ("concat", "sum", "max"):
             raise ValueError(f"unknown reduce {self.reduce!r}")
+        if self.deterministic and self.reduce != "sum":
+            raise ValueError("deterministic=True requires reduce='sum'")
 
 
 @dataclasses.dataclass
@@ -225,6 +308,11 @@ class DispatchReport:
     members_per_chunk: List[int] = dataclasses.field(default_factory=list)
     scale_events: int = 0                # remesh events fired mid-stream
     wall_s: float = 0.0
+    dispatch_ahead: int = 0              # pipeline depth this stream ran at
+    max_in_flight: int = 0               # peak launched-but-unretired chunks
+    staged_device: int = 0               # chunks cut on device (slice_chunk)
+    staged_host: int = 0                 # chunks sliced/padded host-side
+    ema_step_s: float = 0.0              # last step-time EMA (auto_scale)
 
     def summary(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
@@ -247,7 +335,8 @@ class ElasticDispatcher:
                  health_cfg=None, start_members: int = 1,
                  partition_count: Optional[int] = None,
                  chunk_size: Optional[int] = None,
-                 cache_entries: int = 64, auto_scale: bool = False):
+                 cache_entries: int = 64, auto_scale: bool = False,
+                 dispatch_ahead: int = 2):
         from repro.core.elastic import ElasticController, entity_pad_multiple
         from repro.core.health import HealthConfig
 
@@ -270,9 +359,24 @@ class ElasticDispatcher:
         self.cache = CompileCache(cache_entries)
         self.chunk_size = chunk_size
         self.auto_scale = auto_scale
+        # pipeline depth: how many chunks may be launched ahead of the oldest
+        # unretired one (0 = fully synchronous, the pre-async baseline)
+        self.dispatch_ahead = max(int(dispatch_ahead), 0)
+        # device-resident item sets at least this big are chunked on device
+        # (``executor.slice_chunk``) instead of round-tripping through host
+        # numpy; below it the extra per-chunk jit dispatch costs more than
+        # the copies it saves (tests pin 0 to force the device path)
+        self.device_slice_min_bytes = 1 << 20
         self.grid: Optional[DataGrid] = None
         self.scale_events: List[dict] = []
         self._key_weights: Optional[np.ndarray] = None
+        # per-job-class calibrated IAS step-time targets (auto_scale)
+        self.job_targets: Dict[Hashable, float] = {}
+        # launched-but-unretired chunk outputs of the ACTIVE stream; the
+        # remesh barrier drains it, exception cleanup clears it
+        self._in_flight: Deque[Tuple] = collections.deque()
+        self._valid_masks: Dict[Tuple[int, int], jnp.ndarray] = {}
+        self._epoch = 0                  # bumped per remesh (geometry epoch)
         self._build(n0)
 
     @classmethod
@@ -340,9 +444,16 @@ class ElasticDispatcher:
                                            self.table.partition_count)
 
     def _remesh(self, n: int) -> None:
-        """The scale-event callback: rebalance table → retire exactly the
-        outgoing geometry's executables (every registered geometry cache +
-        this dispatcher's job cache) → rebuild mesh → re-home DataGrid."""
+        """The scale-event callback — a PIPELINE BARRIER: drain every
+        in-flight chunk of the active stream, then rebalance table → retire
+        exactly the outgoing geometry's executables (every registered
+        geometry cache + this dispatcher's job cache) → rebuild mesh →
+        re-home DataGrid → resume.  Draining first keeps the event clean
+        (no old-geometry compute overlapping the new geometry's compiles)
+        and is the only mid-stream synchronization the async pipeline does;
+        chunk boundaries and reduce order are unaffected by how many chunks
+        were in flight, so results stay bit-identical."""
+        drained = self._drain_in_flight()
         old_mesh, axis = self.mesh, self.axis
         moved = self.table.rebalance(n, weights=self._partition_weights())
         self._key_weights = None        # one-shot: consumed by this event
@@ -354,30 +465,113 @@ class ElasticDispatcher:
                 retired += dropped
         retired_jobs = self.cache.invalidate(match)
         self._build(n)
+        self._epoch += 1                # wall-clock samples spanning the
+        # barrier are meaningless: the stream loop resets its timer on epoch
         if self.grid is not None:
             self.grid.remesh(self.mesh)
         self.scale_events.append(
             {"n_members": n, "moved_partitions": moved,
-             "retired_cores": retired, "retired_jobs": retired_jobs})
+             "retired_cores": retired, "retired_jobs": retired_jobs,
+             "drained_in_flight": drained})
+
+    @property
+    def in_flight(self) -> int:
+        """Launched-but-unretired chunks of the active stream (0 between
+        streams — the exception-safety observable: a failed ``submit`` must
+        never leak launched buffers)."""
+        return len(self._in_flight)
+
+    def _drain_in_flight(self) -> int:
+        """Block until every launched chunk has retired.  Returns how many
+        were in flight — the remesh barrier records it per scale event.
+        Exception-safe: if a chunk's computation itself raises at the
+        blocking point, the rest of the queue is still dropped — a stale
+        chunk must never leak into (and re-raise inside) the next stream."""
+        n = len(self._in_flight)
+        try:
+            while self._in_flight:
+                _, out, _, _ = self._in_flight.popleft()
+                jax.block_until_ready(out)
+        finally:
+            self._in_flight.clear()
+        return n
+
+    def calibrate_target(self, job: DispatchJob, target_step_time: float
+                         ) -> None:
+        """Pin a job class's IAS step-time target explicitly (overrides the
+        first-sample self-calibration; ``job.target_step_time`` still wins)."""
+        self.job_targets[job.signature] = float(target_step_time)
+
+    def _job_target(self, job: DispatchJob, first_sample: float) -> float:
+        """Resolve the job class's step-time target: the job's own >
+        previously calibrated > self-calibrate NOW so ``first_sample`` sits
+        at the neutral midpoint of the scaling thresholds (load there
+        triggers nothing; later drift does)."""
+        if job.target_step_time is not None:
+            return job.target_step_time
+        target = self.job_targets.get(job.signature)
+        if target is None:
+            mid = 0.5 * (self.health_cfg.max_threshold
+                         + self.health_cfg.min_threshold)
+            target = first_sample / max(mid, 1e-9)
+            self.job_targets[job.signature] = target
+        return target
 
     # ------------------------------------------------------------- submission
     def submit(self, job: DispatchJob, items, *, replicated=(),
                chunk: Optional[int] = None,
-               on_chunk: Optional[Callable] = None) -> Tuple[object,
-                                                             DispatchReport]:
+               on_chunk: Optional[Callable] = None,
+               dispatch_ahead: Optional[int] = None,
+               deliver: str = "device") -> Tuple[object, DispatchReport]:
         """Stream ``items`` (a pytree of arrays sharing leading dim B)
-        through ``job`` in fixed-shape chunks.
+        through ``job`` in fixed-shape chunks, as an ASYNC double-buffered
+        pipeline.
 
         Every chunk is padded to ``pad_to_shards(chunk, n_members)`` rows
         (live rows flagged by the valid mask), so all chunks of a geometry
         share ONE executable — grids larger than device memory stream with
-        at most one compile per (geometry, job-signature).  After each chunk
-        ``on_chunk(dispatcher, chunk_index, n_chunks)`` runs (feed
-        ``observe_load`` there to drive the IAS deterministically), or, with
-        ``auto_scale=True``, the measured chunk wall time is fed as the load
-        sample; if the IAS fires, the remaining chunks re-home onto the new
-        member set.  Returns ``(outputs, DispatchReport)``.
+        at most one compile per (geometry, job-signature).
+
+        Pipelining: chunk k+1 is staged (sliced + padded) and dispatched
+        while chunk k still runs on device — JAX dispatch is asynchronous,
+        so the host never blocks mid-stream except to (1) bound the queue at
+        ``dispatch_ahead`` launched-but-unretired chunks (memory bound;
+        0 = fully synchronous baseline) and (2) take the wall-time samples
+        the IAS needs.  The only other synchronization points are the
+        REMESH BARRIER (``_remesh`` drains the queue before rebuilding) and
+        the final reduce.  Chunk boundaries and reduce order never depend on
+        how many chunks were in flight, so results are bit-identical to the
+        synchronous path for every scale sequence.
+
+        Staging: a DEVICE-resident item set (every leaf a ``jax.Array``) of
+        at least ``device_slice_min_bytes`` never round-trips to host — the
+        source is padded once on device and chunks are cut with
+        ``executor.slice_chunk`` (``lax.dynamic_slice`` + valid masking);
+        host-resident (or tiny, where an extra per-chunk jit dispatch costs
+        more than the copies it saves) items use numpy slicing as before.
+        When no scale event fired mid-stream, outputs stay on device and are
+        exposed LAZILY (callers chain them into the next job or block at
+        their own reduce boundary); a remesh mixes geometries, so the final
+        combine falls back to host.
+
+        After each chunk ``on_chunk(dispatcher, chunk_index, n_chunks)``
+        runs (feed ``observe_load`` there to drive the IAS
+        deterministically).  With ``auto_scale=True`` the dispatcher instead
+        feeds an EMA of measured retirement-to-retirement step times over
+        the job class's ``target_step_time`` (see ``_job_target``) — one
+        ``block_until_ready`` per sample, exactly where the IAS needs a
+        wall-time reading, never a per-chunk stop-the-world.
+
+        ``deliver`` places the final reduce: "device" (default) keeps it
+        lazy on device — the right choice when the output chains into
+        another job; "host" materializes it at the reduce boundary — the
+        right choice when the caller converts to numpy immediately (one
+        gather instead of a sharded device concat PLUS a gather; the values
+        are bitwise identical either way).  Returns
+        ``(outputs, DispatchReport)``.
         """
+        if deliver not in ("device", "host"):
+            raise ValueError(f"unknown deliver {deliver!r}")
         leaves = jax.tree_util.tree_leaves(items)
         if not leaves:
             raise ValueError("submit needs at least one item array")
@@ -390,62 +584,200 @@ class ElasticDispatcher:
         # outputs trim to correct empty arrays, sum/max partials reduce over
         # masked-out rows only — parity with the non-dispatcher vmap path
         n_chunks = max(-(-B // chunk), 1)
-        items_np = jax.tree_util.tree_map(np.asarray, items)
+        depth = (self.dispatch_ahead if dispatch_ahead is None
+                 else max(int(dispatch_ahead), 0))
+        # device-side chunk slicing pays one extra jit dispatch per chunk to
+        # save the host round-trip — worth it exactly when the item set is
+        # big enough for the copies to matter.  Tiny item sets (a grid's
+        # per-variant scalars) stage faster through numpy.  depth 0
+        # reproduces the legacy synchronous path end to end: items round-
+        # trip through host numpy exactly as the pre-async dispatcher staged
+        # them.
+        n_bytes = sum(l.size * l.dtype.itemsize for l in leaves)
+        on_device = (depth > 0 and B > 0
+                     and n_bytes >= self.device_slice_min_bytes
+                     and all(isinstance(l, jax.Array) for l in leaves))
+        if on_device:
+            src = self._pad_device_source(items, chunk, n_chunks, B)
+        else:
+            items_np = jax.tree_util.tree_map(np.asarray, items)
 
         report = DispatchReport(job=job.name, n_items=B, chunk=chunk,
-                                n_chunks=n_chunks)
+                                n_chunks=n_chunks, dispatch_ahead=depth)
         hits0, builds0 = self.cache.hits, self.cache.builds
         events0 = len(self.scale_events)
-        collected = []                    # concat: per-chunk trimmed outputs
-        acc = None                        # sum/max accumulator
+        parts = []           # per-chunk results, in chunk order: trimmed row
+        # outputs (concat) or partial aggregates (sum/max/deterministic)
+        part_epochs = set()  # geometries the parts live on
+        alpha = getattr(self.health_cfg, "ema_alpha", 0.4)
+        stream = {"t_mark": None, "ema": None, "epoch": self._epoch}
+
+        def mark(compiled: bool, t_launch: float):
+            """Sample one per-chunk step time — the retirement-to-retirement
+            wall delta in pipelined steady state, or launch-to-completion
+            when nothing retired before this chunk (short streams) — and,
+            under auto_scale, feed EMA/target to the IAS.  Compile chunks
+            and remesh barriers reset the timer instead of polluting the
+            EMA — their wall is trace/compile or rebuild noise, often
+            10-100x the steady state, and would ratchet the scaler to
+            max_instances."""
+            now = time.perf_counter()
+            if compiled or stream["epoch"] != self._epoch:
+                stream["epoch"] = self._epoch
+                stream["t_mark"] = now
+                return
+            since = (t_launch if stream["t_mark"] is None
+                     else max(stream["t_mark"], t_launch))
+            dt, stream["t_mark"] = now - since, now
+            stream["ema"] = (dt if stream["ema"] is None
+                             else alpha * dt + (1.0 - alpha) * stream["ema"])
+            report.ema_step_s = stream["ema"]
+            if self.auto_scale and on_chunk is None:
+                self.observe_load(stream["ema"]
+                                  / self._job_target(job, stream["ema"]))
+
+        def retire_oldest():
+            """Block on the oldest launched chunk, then sample."""
+            _, out, compiled, t_launch = self._in_flight.popleft()
+            jax.block_until_ready(out)
+            mark(compiled, t_launch)
+
         t_start = time.perf_counter()
-        for ci in range(n_chunks):
-            lo, hi = ci * chunk, min((ci + 1) * chunk, B)
-            n_live = hi - lo
-            M = self.executor.n_members
-            L = pad_to_shards(chunk, M)
-            sl = jax.tree_util.tree_map(lambda a: a[lo:hi], items_np)
-            if L != n_live:               # pad by repeating the last row —
-                # a well-defined duplicate the valid mask marks dead
-                # (zeros when the slice is empty: nothing to repeat)
-                sl = jax.tree_util.tree_map(
-                    lambda a: np.concatenate(
-                        [a, np.repeat(a[-1:], L - n_live, axis=0)])
-                    if n_live else np.zeros((L,) + a.shape[1:], a.dtype), sl)
-            valid = np.arange(L) < n_live
-            builds_before = self.cache.builds
-            fn = self._executable(job, sl, replicated, L)
-            compiled_now = self.cache.builds != builds_before
-            t0 = time.perf_counter()
-            out = fn(sl, jnp.asarray(valid), *replicated)
-            out = jax.tree_util.tree_map(np.asarray, out)
-            wall = time.perf_counter() - t0
-            if job.reduce == "concat":
-                collected.append(jax.tree_util.tree_map(
-                    lambda a: a[:n_live], out))
-            elif acc is None:
-                acc = out
+        try:
+            for ci in range(n_chunks):
+                lo, hi = ci * chunk, min((ci + 1) * chunk, B)
+                n_live = hi - lo
+                M = self.executor.n_members
+                L = pad_to_shards(chunk, M)
+                if on_device:
+                    sl, valid = self.executor.slice_chunk(src, lo, L, n_live)
+                    report.staged_device += 1
+                else:
+                    sl, valid = self._stage_host(items_np, lo, n_live, L)
+                    report.staged_host += 1
+                builds_before = self.cache.builds
+                fn = self._executable(job, sl, replicated, L)
+                compiled_now = self.cache.builds != builds_before
+                t_launch = time.perf_counter()
+                out = fn(sl, valid, *replicated)         # async dispatch
+                # (deterministic jobs: the executable itself tree-reduced
+                # the rows, so `out` is already the chunk partial)
+                if depth == 0:
+                    # synchronous baseline (``streamed_sync``): materialize
+                    # the chunk on host NOW — one blocking D2H per chunk,
+                    # exactly the pre-async behavior this pipeline replaces
+                    out = jax.tree_util.tree_map(np.asarray, out)
+                    mark(compiled_now, t_launch)
+                else:
+                    self._in_flight.append((ci, out, compiled_now, t_launch))
+                    report.max_in_flight = max(report.max_in_flight,
+                                               len(self._in_flight))
+                # combine lazily, in chunk order — retirement (blocking) is
+                # decoupled from reduction, so order never depends on how
+                # many chunks are in flight.  concat rows are trimmed at the
+                # reduce boundary, not here: an eager mid-stream slice of an
+                # unevenly-sharded chunk would cost a per-chunk reshard
+                parts.append((n_live, out))
+                part_epochs.add(self._epoch)
+                report.members_per_chunk.append(M)
+                if on_chunk is not None:
+                    on_chunk(self, ci, n_chunks)
+                while len(self._in_flight) > depth:
+                    retire_oldest()
+            if self.auto_scale and on_chunk is None:
+                # the IAS needs samples even from streams shorter than the
+                # pipeline depth: drain the tail WITH sampling (short
+                # streams fall back to launch-to-completion walls in mark)
+                while self._in_flight:
+                    retire_oldest()
             else:
-                comb = np.add if job.reduce == "sum" else np.maximum
-                acc = jax.tree_util.tree_map(comb, acc, out)
-            report.members_per_chunk.append(M)
-            if on_chunk is not None:
-                on_chunk(self, ci, n_chunks)
-            elif self.auto_scale and not compiled_now:
-                # a cache-miss chunk's wall is dominated by trace+compile
-                # time (often 10-100x steady state) — feeding it would
-                # ratchet the IAS to max_instances on pure compile noise
-                self.observe_load(wall / self.health_cfg.target_step_time)
+                # lazy delivery: drop the queue without blocking — `parts`
+                # keeps the arrays alive, the in-flight bound was enforced
+                # chunk by chunk, and the caller blocks at its own reduce
+                # boundary (host delivery materializes right below anyway)
+                self._in_flight.clear()
+        finally:
+            # exception mid-stream (a failing on_chunk, a bad replicated
+            # operand): quiesce and forget every launched chunk so the
+            # dispatcher is reusable and no buffer outlives the stream
+            self._drain_in_flight()
+
+        # one geometry throughout, an async stream, and device delivery:
+        # combine on device and expose the result lazily; host delivery, a
+        # mid-stream remesh (parts on different device sets) or the
+        # synchronous baseline (parts already np, legacy host-output
+        # semantics) combine on host
+        combine_on_device = (deliver == "device" and depth > 0
+                             and len(part_epochs) <= 1)
+        outputs = self._combine(job, parts, combine_on_device)
         report.compiles = self.cache.builds - builds0
         report.cache_hits = self.cache.hits - hits0
         report.scale_events = len(self.scale_events) - events0
         report.wall_s = time.perf_counter() - t_start
-        if job.reduce == "concat":
-            outputs = jax.tree_util.tree_map(
-                lambda *parts: np.concatenate(parts, axis=0), *collected)
-        else:
-            outputs = acc
         return outputs, report
+
+    # ---------------------------------------------------- staging + combine
+    def _pad_device_source(self, items, chunk: int, n_chunks: int, B: int):
+        """Pad a device-resident item source ONCE (repeating the last row —
+        the same well-defined dead-row fill the host path uses) so every
+        fixed-shape ``slice_chunk`` window stays in bounds at ANY member
+        count the IAS can reach.  ``pad_to_shards(chunk, m)`` is NOT
+        monotone in m (pad_to_shards(4, 3) = 6 > pad_to_shards(4, 4) = 4),
+        so the bound is the max over every possible member count — an
+        undersized pad would let ``dynamic_slice`` clamp the window and
+        silently compute on the wrong rows.  One eager device op per
+        stream; no host round-trip."""
+        L_max = max(pad_to_shards(chunk, m)
+                    for m in range(1, len(self.devices) + 1))
+        need = (n_chunks - 1) * chunk + L_max
+        if need <= B:
+            return items
+        return jax.tree_util.tree_map(
+            lambda a: jnp.concatenate(
+                [a, jnp.repeat(a[-1:], need - B, axis=0)]), items)
+
+    def _stage_host(self, items_np, lo: int, n_live: int, L: int):
+        """Host-side staging: numpy slice + pad-by-repeating-the-last-row
+        (zeros when the slice is empty: nothing to repeat).  Padded rows are
+        marked dead by the valid mask — which depends only on (L, n_live),
+        so the device mask is memoized: full chunks of a stream reuse ONE
+        array instead of paying a device_put per chunk."""
+        sl = jax.tree_util.tree_map(lambda a: a[lo:lo + n_live], items_np)
+        if L != n_live:
+            sl = jax.tree_util.tree_map(
+                lambda a: np.concatenate(
+                    [a, np.repeat(a[-1:], L - n_live, axis=0)])
+                if n_live else np.zeros((L,) + a.shape[1:], a.dtype), sl)
+        valid = self._valid_masks.get((L, n_live))
+        if valid is None:
+            valid = jnp.asarray(np.arange(L) < n_live)
+            self._valid_masks[(L, n_live)] = valid
+        return sl, valid
+
+    @staticmethod
+    def _combine(job: DispatchJob, parts, combine_on_device: bool):
+        """Cross-chunk reduction at the stream's reduce boundary.  Each part
+        is ``(n_live, chunk_output)``; padded rows of concat outputs are
+        trimmed HERE, off the hot loop.  On ONE geometry (no mid-stream
+        remesh) an async stream stays on device and the result is exposed
+        lazily; across geometries the parts live on different device sets
+        (eager device ops would not colocate) and the synchronous baseline
+        already materialized per chunk, so those combine on host — the
+        IEEE-754 f32 ops are bitwise identical either way."""
+        if combine_on_device:
+            asarray = lambda a: a
+            cat = lambda *p: jnp.concatenate(p, axis=0)
+            add, mx = jnp.add, jnp.maximum
+        else:
+            asarray = np.asarray
+            cat = lambda *p: np.concatenate(p, axis=0)
+            add, mx = np.add, np.maximum
+        if job.reduce == "concat":
+            trimmed = [jax.tree_util.tree_map(
+                lambda a: asarray(a)[:n_live], out) for n_live, out in parts]
+            return jax.tree_util.tree_map(cat, *trimmed)
+        aggs = [jax.tree_util.tree_map(asarray, out) for _, out in parts]
+        return _chunk_tree_reduce(aggs, add if job.reduce == "sum" else mx)
 
     # ------------------------------------------------------------ executables
     def _executable(self, job: DispatchJob, chunk_tree, replicated, L: int):
@@ -460,8 +792,8 @@ class ElasticDispatcher:
             (tuple(np.shape(a)), np.dtype(np.asarray(a).dtype).str)
             for a in jax.tree_util.tree_leaves(replicated))
         mode = "member" if job.member_fn is not None else "global"
-        key = (self.mesh, self.axis, job.signature, job.reduce, mode, L,
-               struct, rep_struct)
+        key = (self.mesh, self.axis, job.signature, job.reduce,
+               job.deterministic, mode, L, struct, rep_struct)
         fn = self.cache.get(key)
         if fn is None:
             builder = (self._build_member if mode == "member"
@@ -470,33 +802,63 @@ class ElasticDispatcher:
             self.cache.put(key, fn)
         return fn
 
+    @property
+    def _chunk_donate(self):
+        """donate_argnums for the chunk buffer (argnum 0, the chunk tree):
+        it is used exactly once, so XLA can recycle its memory for outputs —
+        steady-state streaming then allocates nothing.  The valid mask is
+        NOT donated: it is memoized across chunks (``_stage_host``) and
+        donation would delete it under the later chunks.  Decided per
+        dispatcher from its OWN devices (never ``jax.default_backend``,
+        which would pin the process backend at import and misjudge
+        mixed-backend use); CPU has no donation support and would only warn
+        per compile."""
+        return () if self.devices[0].platform == "cpu" else (0,)
+
     def _build_member(self, job: DispatchJob):
         executor = self.executor          # bound to the key's mesh
         axis = self.axis
+        # a deterministic job's fn returns PER-ROW contributions which the
+        # executable itself tree-reduces (position-aligned row tree) AFTER
+        # the gather — no member-count-shaped psum grouping ever touches
+        # the float values, and the donated chunk buffers are never touched
+        # again after the call returns
+        row_out = job.reduce == "concat" or job.deterministic
 
         def body(data, *rep):
             local, lval = data
             out = job.member_fn(local, lval, *rep)
-            if job.reduce == "sum":
+            if not row_out and job.reduce == "sum":
                 return jax.tree_util.tree_map(executor.psum, out)
-            if job.reduce == "max":
+            if not row_out and job.reduce == "max":
                 return jax.tree_util.tree_map(executor.pmax, out)
             return out
 
-        out_specs = P(axis) if job.reduce == "concat" else P()
+        out_specs = P(axis) if row_out else P()
 
         def call(chunk_tree, valid, *rep):
-            return executor.execute_on_key_owners(
+            out = executor.execute_on_key_owners(
                 body, (chunk_tree, valid), replicated_args=rep,
                 out_specs=out_specs)
+            if job.deterministic:
+                out = jax.tree_util.tree_map(
+                    lambda a: _row_tree_sum(a, valid), out)
+            return out
 
-        return jax.jit(call)
+        return jax.jit(call, donate_argnums=self._chunk_donate)
 
     def _build_global(self, job: DispatchJob):
         executor = self.executor
         axis = self.axis
-        jitted = jax.jit(lambda chunk_tree, valid, *rep:
-                         job.global_fn(chunk_tree, valid, *rep))
+
+        def run(chunk_tree, valid, *rep):
+            out = job.global_fn(chunk_tree, valid, *rep)
+            if job.deterministic:
+                out = jax.tree_util.tree_map(
+                    lambda a: _row_tree_sum(a, valid), out)
+            return out
+
+        jitted = jax.jit(run, donate_argnums=self._chunk_donate)
 
         def call(chunk_tree, valid, *rep):
             # auto-SPMD: place the chunk partitioned, the rest replicated,

@@ -18,6 +18,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.compat import shard_map
 
 
+@functools.partial(jax.jit, static_argnames=("length",))
+def _slice_chunk(src, lo, n_live, *, length):
+    """Fixed-shape device-side chunk cut: rows [lo, lo+length) of ``src``
+    plus the live-row mask ``arange(length) < n_live``.  ``length`` is static
+    (one executable per chunk shape); ``lo``/``n_live`` are traced operands,
+    so streaming a whole corpus reuses a single compiled slicer."""
+    sl = jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, lo, length, axis=0), src)
+    valid = jnp.arange(length, dtype=jnp.int32) < n_live
+    return sl, valid
+
+
 class DistributedExecutor:
     def __init__(self, mesh: Mesh, axis: str = "data"):
         self.mesh = mesh
@@ -48,6 +60,18 @@ class DistributedExecutor:
             spec = (P() if value.ndim == 0
                     else P(self.axis, *([None] * (value.ndim - 1))))
         return jax.device_put(value, self.sharding(spec))
+
+    def slice_chunk(self, src, lo: int, length: int, n_live: int):
+        """Cut a fixed-shape ``length``-row chunk starting at row ``lo`` from
+        a DEVICE-resident item source, entirely on device (``lax.
+        dynamic_slice`` + a valid mask for the first ``n_live`` rows) — a
+        corpus produced by a previous job never round-trips to host just to
+        be re-chunked.  The caller must guarantee ``lo + length`` does not
+        exceed the source's rows (the dispatcher pads the source once, at
+        stream start); ``dynamic_slice`` would otherwise clamp ``lo`` and
+        silently shift the window.  ``lo``/``n_live`` ride into the jit as
+        weak-typed scalars — no per-chunk eager device_put."""
+        return _slice_chunk(src, lo, n_live, length=length)
 
     def execute_on_key_owners(self, fn: Callable, data, *, out_specs=None,
                               replicated_args=()):

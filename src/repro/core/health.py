@@ -26,6 +26,7 @@ class HealthConfig:
     min_instances: int = 1
     window: int = 8                         # smoothing window
     target_step_time: float = 1.0           # defines load = step_time/target
+    ema_alpha: float = 0.4                  # async dispatch step-time EMA
     nan_is_fatal: bool = True
 
 

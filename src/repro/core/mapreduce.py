@@ -19,7 +19,9 @@ dispatch, and ADAPTIVE SCALING — the IntelligentAdaptiveScaler can grow or
 shrink the member set between chunks and the stream resumes on the new
 mesh.  Word count reduces in int32, so results are BIT-identical for any
 member count, chunking, or mid-stream scale event (both backends agree
-exactly — the thesis's accuracy claim, now at the MapReduce layer too).
+exactly — the thesis's accuracy claim, now at the MapReduce layer too);
+FLOAT jobs (``word_weight_job``) opt into the dispatcher's deterministic
+tree reduction and get the same guarantee despite non-associative adds.
 The old ``n_files % members == 0`` restriction is gone: the dispatcher pads
 chunks to whole shards and masks the padding out of the reduction.
 
@@ -44,10 +46,17 @@ from repro.core.dispatch import DispatchJob, ElasticDispatcher
 
 @dataclasses.dataclass(frozen=True)
 class MapReduceJob:
-    """map_fn: (file_chunk) -> partial aggregate; combine: pairwise reduce."""
+    """map_fn: (file_chunk) -> partial aggregate; combine: pairwise reduce.
+
+    ``deterministic`` routes the job through the dispatcher's deterministic
+    float reduction: per-file map outputs are combined by position-aligned
+    pairwise trees instead of shard-shaped sums, so FLOAT jobs get the same
+    bit-identity guarantee across backends, member counts, scale events and
+    (power-of-two) chunkings that int32 word count has for free."""
     map_fn: Callable
     n_keys: int                     # size of the reduced key space
     name: str = "job"
+    deterministic: bool = False     # fixed-tree float reduction
 
 
 def word_count_job(vocab: int, use_kernel: bool = False) -> MapReduceJob:
@@ -65,6 +74,22 @@ def word_count_job(vocab: int, use_kernel: bool = False) -> MapReduceJob:
             return jnp.zeros((vocab,), jnp.int32).at[flat].add(
                 jnp.ones_like(flat), mode="drop")
     return MapReduceJob(map_fn=fn, n_keys=vocab, name="word_count")
+
+
+def word_weight_job(vocab: int) -> MapReduceJob:
+    """A FLOAT MapReduce job: each token contributes a rank-decaying f32
+    weight ``1 / (1 + token)`` to its vocab bin (a tf-idf-flavoured twist on
+    the thesis's word count).  Float adds are not associative, so this job
+    opts into the dispatcher's deterministic tree reduction — results are
+    bit-identical across backends, member counts, mid-stream scale events
+    and power-of-two chunkings, exactly like the int32 word count."""
+    def fn(chunk):
+        flat = chunk.reshape(-1)
+        w = 1.0 / (1.0 + flat.astype(jnp.float32))
+        return jnp.zeros((vocab,), jnp.float32).at[flat].add(w, mode="drop")
+
+    return MapReduceJob(map_fn=fn, n_keys=vocab, name="word_weight",
+                        deterministic=True)
 
 
 class MapReduceEngine:
@@ -100,8 +125,11 @@ class MapReduceEngine:
         """files: (n_files, file_len) int tokens.  ``chunk`` streams the
         corpus ``chunk`` files per dispatch (None = one dispatch); the IAS
         may re-home the stream between chunks (``on_chunk`` feeds load).
-        ``files`` is left as-is: the dispatcher slices chunks host-side, so
-        forcing a device array here would only add a D2H round-trip."""
+        ``files`` is left as-is: a large DEVICE-resident corpus (e.g. the
+        output of a previous dispatcher job; see the dispatcher's
+        ``device_slice_min_bytes``) is chunked on device by ``slice_chunk``
+        and never round-trips to host; a host (or tiny) corpus is sliced
+        host-side while the previous chunk computes (the async pipeline)."""
         out, report = self.dispatcher.submit(
             self._dispatch_job(job), files, chunk=chunk, on_chunk=on_chunk)
         self.last_report = report
@@ -113,7 +141,22 @@ class MapReduceEngine:
         executable, while repeated runs of the SAME job object hit the
         compile cache."""
         verbose = self.verbose
-        sig = ("mapreduce", self.backend, job.name, job.n_keys, job.map_fn)
+        sig = ("mapreduce", self.backend, job.name, job.n_keys, job.map_fn,
+               job.deterministic)
+
+        if job.deterministic:
+            # per-FILE map outputs stream out unreduced; the dispatcher owns
+            # the (position-aligned, member-count-invariant) tree reduction,
+            # so the float result never sees a shard-shaped sum.  Both
+            # backends emit identical per-row values — bit-parity for free.
+            def per_row(files, valid, *_):
+                del valid                # dispatcher masks the padded rows
+                return jax.vmap(job.map_fn)(files)
+
+            kw = ({"member_fn": per_row} if self.backend == "hazelcast"
+                  else {"global_fn": per_row})
+            return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
+                               reduce="sum", deterministic=True, **kw)
 
         if self.backend == "hazelcast":
             # explicit member-local map + collective reduce (psum)

@@ -237,6 +237,147 @@ print("OK")
     assert "OK" in r.stdout, r.stdout + r.stderr
 
 
+def test_async_stream_bit_identical_with_chunks_in_flight():
+    """Satellite acceptance: the async double-buffered stream survives
+    1→2→4→2 scale events with ≥2 chunks IN FLIGHT at every remesh barrier,
+    bit-identical to the synchronous baseline AND the no-dispatcher oracle;
+    the deterministic float MapReduce job holds bit-identity over the same
+    scale path; and auto_scale's EMA feeding scales out with no on_chunk
+    feeder."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.dispatch import ElasticDispatcher
+from repro.core.cloudsim import SimulationConfig
+from repro.core.des_scan import make_scenario_grid, run_scenario_grid
+from repro.core.health import HealthConfig
+from repro.core.mapreduce import MapReduceEngine, make_corpus, word_weight_job
+
+hc = HealthConfig(target_step_time=1.0, max_threshold=0.8, min_threshold=0.2,
+                  time_between_scaling=1, window=1, max_instances=4)
+cfg = SimulationConfig(n_vms=12, n_cloudlets=48, broker="matchmaking")
+grid = make_scenario_grid(seeds=range(6), mi_scales=[0.7, 1.3],
+                          vm_counts=[6, 12])           # B = 24, 6 chunks of 4
+ref = run_scenario_grid(cfg, grid)                     # no-dispatcher oracle
+
+def loads_feeder(seq):
+    it = iter(seq)
+    def on_chunk(disp, ci, n):
+        l = next(it, None)
+        if l is not None:
+            disp.observe_load(l)
+    return on_chunk
+
+LOADS = [0.5, 2.0, 0.5, 2.0, 0.5, 0.05]                # events at ci 1, 3, 5
+runs = {}
+for label, ahead in (("async", 2), ("sync", 0)):
+    d = ElasticDispatcher(health_cfg=hc, start_members=1,
+                          dispatch_ahead=ahead)
+    r = run_scenario_grid(cfg, grid, dispatcher=d, chunk=4,
+                          on_chunk=loads_feeder(LOADS))
+    assert r.dispatch["members_per_chunk"] == [1, 1, 2, 2, 4, 4], (label, r.dispatch)
+    assert r.dispatch["scale_events"] == 3
+    drained = [ev["drained_in_flight"] for ev in d.scale_events]
+    if label == "async":
+        # the pipeline really was >= 2 chunks ahead at EVERY remesh barrier
+        assert all(n >= 2 for n in drained), drained
+        assert r.dispatch["max_in_flight"] >= 2, r.dispatch
+    else:
+        assert all(n == 0 for n in drained), drained   # sync: nothing queued
+    runs[label] = r
+
+for label, r in runs.items():
+    assert np.array_equal(ref.finish_times, r.finish_times), label
+    assert np.array_equal(ref.makespans, r.makespans), label
+    assert np.array_equal(ref.vm_assign, r.vm_assign), label
+
+# ---- deterministic FLOAT MapReduce across the same scale path ----------
+corpus = make_corpus(16, 512, vocab=64, seed=5)
+base = None
+for ahead in (2, 0):
+    for backend in ("hazelcast", "infinispan"):
+        eng = MapReduceEngine(backend=backend, dispatcher=ElasticDispatcher(
+            health_cfg=hc, start_members=1, dispatch_ahead=ahead))
+        out = np.asarray(eng.run(word_weight_job(64), jnp.asarray(corpus),
+                                 chunk=4, on_chunk=loads_feeder([2.0, 2.0, 0.05])))
+        assert eng.last_report.members_per_chunk == [1, 2, 4, 2], (backend, ahead)
+        base = out if base is None else base
+        assert np.array_equal(base, out), (backend, ahead)
+# ... and, with a power-of-two chunking (pow2 chunks form exact subtrees of
+# the global row-aligned tree), equals the single-member SINGLE-CHUNK run
+# bit-for-bit despite the float dtype
+eng1 = MapReduceEngine(backend="hazelcast",
+                       dispatcher=ElasticDispatcher(start_members=1))
+out1 = np.asarray(eng1.run(word_weight_job(64), jnp.asarray(corpus)))
+assert np.array_equal(base, out1)
+
+# ---- auto_scale: EMA feeding scales out with NO on_chunk feeder --------
+from repro.core.des_scan import scenario_grid_job
+hc2 = dataclasses.replace(hc, max_instances=2)
+d2 = ElasticDispatcher(health_cfg=hc2, start_members=1, auto_scale=True,
+                       dispatch_ahead=2)
+d2.calibrate_target(scenario_grid_job(cfg, False), 1e-9)  # everything is slow
+r2 = run_scenario_grid(cfg, grid, dispatcher=d2, chunk=3)
+assert d2.n_members == 2, d2.n_members
+assert r2.dispatch["scale_events"] >= 1
+assert r2.dispatch["ema_step_s"] > 0.0
+assert np.array_equal(ref.finish_times, r2.finish_times)
+
+# ---- non-divisor member count on the device path -----------------------
+# pad_to_shards(chunk, m) is NOT monotone in m (pad(4,3)=6 > pad(4,4)=4):
+# the one-time device-source pad must cover the widest reachable window or
+# dynamic_slice would clamp and compute on the wrong rows
+from repro.core.dispatch import DispatchJob
+d3 = ElasticDispatcher(devices=jax.devices(), start_members=3)
+d3.device_slice_min_bytes = 0
+j = DispatchJob(name="rows", signature="rows",
+                member_fn=lambda x, v, *_: x * 2.0)
+x = jnp.arange(16.0, dtype=jnp.float32).reshape(8, 2)
+out, rep = d3.submit(j, x, chunk=4)
+assert rep.staged_device == rep.n_chunks == 2, rep
+assert np.array_equal(np.asarray(out), np.asarray(x) * 2.0)
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_cluster_auto_wires_exchange_load_into_rebalance():
+    """ROADMAP exchange follow-on (c), retired: every ``scan_dist`` run
+    feeds its measured per-VM exchange load into the dispatcher's
+    ``observe_key_weights`` automatically, so the next scale event
+    rebalances locality-aware with NO caller cooperation — and the sample
+    is consumed by that event (one-shot)."""
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import numpy as np
+from repro.core.cloudsim import ElasticSimulationCluster, SimulationConfig
+from repro.core.health import HealthConfig
+
+hc = HealthConfig(target_step_time=1.0, max_threshold=0.8, min_threshold=0.2,
+                  time_between_scaling=1, window=1, max_instances=2)
+cl = ElasticSimulationCluster(start_members=1, health_cfg=hc)
+cfg = SimulationConfig(n_vms=16, n_cloudlets=64, core="scan_dist")
+res = cl.simulate(cfg)
+kw = cl.dispatcher._key_weights
+assert kw is not None, "simulate() did not auto-feed key weights"
+assert kw.sum() == cfg.n_cloudlets                 # one weight per cloudlet
+counts = np.bincount(res.vm_assign, minlength=kw.shape[0])
+assert np.array_equal(kw.astype(np.int64), counts), (kw, counts)
+cl.observe_load(2.0)                               # scale out 1 -> 2
+assert cl.n_members == 2
+assert cl.dispatcher._key_weights is None          # one-shot: consumed
+# the run after the event re-feeds a fresh observation, bit-identically
+res2 = cl.simulate(cfg)
+assert cl.dispatcher._key_weights is not None
+assert np.array_equal(res.finish_times, res2.finish_times)
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=600)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
 def test_auto_block_cache_writes_only_on_measurement():
     """Steady-state auto-capacity hits must not rewrite the block cache:
     only the first call measures (one miss, one metadata write that does
@@ -292,6 +433,163 @@ def test_elastic_cluster_is_thin_dispatcher_client():
     # an externally-built dispatcher can be shared with the cluster
     cl2 = ElasticSimulationCluster(dispatcher=d)
     assert cl2.dispatcher is d
+
+
+# ------------------------------------------------- async dispatch pipeline
+
+def test_in_flight_drains_cleanly_on_exception():
+    """A failing ``on_chunk`` mid-stream must not leak launched buffers:
+    the in-flight queue is drained by the cleanup path and the dispatcher
+    stays fully usable for the next stream (tier-1 smoke of the async
+    pipeline's exception safety)."""
+    import jax.numpy as jnp
+
+    d = ElasticDispatcher(start_members=1, dispatch_ahead=3)
+    job = DispatchJob(name="j", signature="j",
+                      member_fn=lambda x, v, *_: x * 2.0, reduce="concat")
+    seen_in_flight = []
+
+    def boom(disp, ci, n):
+        seen_in_flight.append(disp.in_flight)
+        if ci == 2:
+            raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError, match="boom"):
+        d.submit(job, np.ones((12, 2), np.float32), chunk=2, on_chunk=boom)
+    assert max(seen_in_flight) >= 2          # the pipeline really was ahead
+    assert d.in_flight == 0                  # nothing leaked
+    out, rep = d.submit(job, np.ones((4, 2), np.float32), chunk=2)
+    assert np.asarray(out).shape == (4, 2) and d.in_flight == 0
+    # sum jobs drain too (partials queue through the same pipeline)
+    sum_job = DispatchJob(
+        name="s", signature="s", reduce="sum",
+        member_fn=lambda x, v, *_: jnp.where(v[:, None], x, 0).sum(axis=0))
+    with pytest.raises(RuntimeError, match="boom"):
+        d.submit(sum_job, np.ones((12, 2), np.float32), chunk=2,
+                 on_chunk=boom)
+    assert d.in_flight == 0
+
+
+def test_device_resident_items_zero_host_copies(monkeypatch):
+    """Device-resident item sets stay on device: chunks are cut by
+    ``executor.slice_chunk`` (host staging is patched to FAIL), outputs are
+    device arrays that chain into the next job, and a counting
+    ``executor.put`` shim sees no host (numpy) operand on the global path."""
+    import jax
+    import jax.numpy as jnp
+
+    d = ElasticDispatcher(start_members=1)
+    d.device_slice_min_bytes = 0         # force device slicing at any size
+    monkeypatch.setattr(
+        ElasticDispatcher, "_stage_host",
+        staticmethod(lambda *a: (_ for _ in ()).throw(
+            AssertionError("host staging touched on the device path"))))
+
+    job = DispatchJob(name="j", signature="j",
+                      member_fn=lambda x, v, *_: x + 1.0, reduce="concat")
+    items = jnp.arange(20.0, dtype=jnp.float32).reshape(10, 2)
+    out, rep = d.submit(job, items, chunk=3)
+    assert rep.staged_device == rep.n_chunks == 4 and rep.staged_host == 0
+    leaf = jax.tree_util.tree_leaves(out)[0]
+    assert isinstance(leaf, jax.Array)       # exposed lazily, still on device
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(items) + 1.0)
+
+    # a previous job's device output feeds the next submit host-copy-free
+    out2, rep2 = d.submit(job, out, chunk=4)
+    assert rep2.staged_device == rep2.n_chunks and rep2.staged_host == 0
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(items) + 2.0)
+
+    # global (auto-SPMD) path: the counting put shim must never see numpy
+    host_puts = []
+    orig_put = d.executor.put
+
+    def counting_put(value, spec=None):
+        if isinstance(value, np.ndarray):
+            host_puts.append(value.shape)
+        return orig_put(value, spec)
+
+    monkeypatch.setattr(d.executor, "put", counting_put)
+    gjob = DispatchJob(name="g", signature="g",
+                       global_fn=lambda x, v, *_: x * 3.0, reduce="concat")
+    out3, rep3 = d.submit(gjob, out2, chunk=5)
+    assert rep3.staged_device == rep3.n_chunks and rep3.staged_host == 0
+    assert host_puts == []                   # zero host copies end to end
+    np.testing.assert_array_equal(np.asarray(out3),
+                                  (np.asarray(items) + 2.0) * 3.0)
+
+
+def test_deterministic_sum_requires_sum_reduce():
+    with pytest.raises(ValueError):
+        DispatchJob(name="x", signature="x", member_fn=lambda *a: a,
+                    reduce="concat", deterministic=True)
+
+
+def test_deterministic_float_sum_bit_identical_across_chunkings():
+    """The fixed-arity pairwise tree keyed on chunk index: float sums are
+    bit-identical across power-of-two chunk sizes (equal pow2 chunks form
+    exact subtrees of the global row-aligned tree) and across host/device
+    item staging — the int32 word-count guarantee, extended to floats."""
+    import jax.numpy as jnp
+
+    d = ElasticDispatcher(start_members=1)
+    job = DispatchJob(name="det", signature="det", reduce="sum",
+                      deterministic=True,
+                      member_fn=lambda x, v, *_: x)
+    rng = np.random.RandomState(0)
+    x = (rng.randn(22, 5) * 10 ** rng.uniform(-3, 3, (22, 5))).astype(
+        np.float32)
+    outs = [np.asarray(d.submit(job, x, chunk=c)[0]) for c in (2, 4, 8, 16)]
+    outs += [np.asarray(d.submit(job, jnp.asarray(x), chunk=c)[0])
+             for c in (2, 8)]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+    # and a non-pow2 chunking is still deterministic run-to-run
+    a = np.asarray(d.submit(job, x, chunk=3)[0])
+    b = np.asarray(d.submit(job, x, chunk=3)[0])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_auto_scale_ema_and_target_calibration():
+    """auto_scale feeds an EMA of retirement-to-retirement step times: the
+    synchronous baseline still samples per chunk, compile chunks reset the
+    timer instead of polluting the EMA, an explicit per-job-class target
+    dominates, and an uncalibrated job class self-calibrates so its first
+    sample lands at the neutral midpoint of the scaling thresholds."""
+    d = ElasticDispatcher(start_members=1, auto_scale=True, dispatch_ahead=0)
+    job = DispatchJob(name="j", signature="jsig",
+                      member_fn=lambda x, v, *_: x * 2.0, reduce="concat",
+                      target_step_time=1e9)
+    d.submit(job, np.ones((12, 2), np.float32), chunk=2)
+    assert d.job_targets == {}            # explicit target: no calibration
+    assert d.controller.monitor.load() < 0.1      # huge target => tiny load
+
+    job2 = DispatchJob(name="k", signature="ksig",
+                       member_fn=lambda x, v, *_: x * 2.0, reduce="concat")
+    _, rep = d.submit(job2, np.ones((12, 2), np.float32), chunk=2)
+    assert rep.ema_step_s > 0.0
+    target = d.job_targets.get("ksig")
+    assert target is not None and target > 0.0    # self-calibrated
+    # the calibrating sample itself lands at the neutral threshold midpoint
+    mid = 0.5 * (d.health_cfg.max_threshold + d.health_cfg.min_threshold)
+    assert d._job_target(job2, 1.0) == target     # sticky once calibrated
+    d.calibrate_target(job2, 123.0)
+    assert d.job_targets["ksig"] == 123.0         # explicit API overrides
+    fresh = DispatchJob(name="f", signature="fsig",
+                        member_fn=lambda x, v, *_: x, reduce="concat")
+    assert d._job_target(fresh, 2.0) == pytest.approx(2.0 / mid)
+
+    # PIPELINED short streams (n_chunks <= depth, nothing ever retires
+    # mid-loop) still sample: the auto_scale end-drain falls back to
+    # launch-to-completion walls, so the IAS is never starved
+    d2 = ElasticDispatcher(start_members=1, auto_scale=True,
+                           dispatch_ahead=2)
+    sj = DispatchJob(name="s", signature="ssig", target_step_time=1e9,
+                     member_fn=lambda x, v, *_: x * 2.0, reduce="concat")
+    d2.submit(sj, np.ones((4, 2), np.float32), chunk=2)     # compile chunk
+    _, rep2 = d2.submit(sj, np.ones((4, 2), np.float32), chunk=2)
+    assert rep2.ema_step_s > 0.0 and rep2.max_in_flight == 2
+    assert d2.in_flight == 0
 
 
 # ------------------------------------------- locality-aware rebalance (seed)
