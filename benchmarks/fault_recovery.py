@@ -1,0 +1,158 @@
+"""Fault tolerance — recovery latency per fault kind + fault-check overhead.
+
+Two measurements on the scenario-grid workload, written to
+``BENCH_fault.json``:
+
+* ``overhead``: the fault-free ``streamed_async`` path with and without the
+  guarded retirement (finiteness probe + chunk deadline), measured PAIRED —
+  the two dispatchers alternate rep by rep so both sample the same box
+  states, each keeps its best.  The guarded/unguarded ratio is the price of
+  always-on failure detection; the PR acceptance pins it at <= 2%.  Both
+  walls are ``scan_s`` entries (labelled by ``core``), so ``run.py --check``
+  gates them against the committed file like every other benchmark.
+* ``recovery``: for each fault kind, one injected failure mid-stream and the
+  measured detect-to-replayed latency — ``recovery_s`` (forced failure
+  remesh, member_crash/quarantine) or ``recovered_after_s`` (chunk replay:
+  nan_poison / stall / compile_fail).  Latency entries are informational
+  (they include injected sleeps), not regression-gated.
+"""
+import json
+import os
+import sys
+
+if __package__ in (None, ""):   # standalone: python benchmarks/fault_recovery.py
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    _root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, smoke
+from repro.core.cloudsim import SimulationConfig
+from repro.core.des_scan import make_scenario_grid, run_scenario_grid
+from repro.core.faults import FaultInjector, FaultSpec, RetryPolicy
+
+BENCH_JSON = "BENCH_fault.json"
+
+
+def _make(B: int, n_vms: int, n_cloudlets: int):
+    cfg = SimulationConfig(n_vms=n_vms, n_cloudlets=n_cloudlets)
+    grid = make_scenario_grid(
+        seeds=range(max(1, -(-B // 8))), mi_scales=[0.75, 1.5],
+        vm_counts=[n_vms // 2, n_vms], mips_dists=["uniform", "fixed"])
+    grid = {k: np.asarray(v)[:B] for k, v in grid.items()}
+    assert len(grid["seeds"]) == B
+    return cfg, grid
+
+
+def _dispatcher(members, *, policy=None, injector=None, ahead=4, pool=None):
+    from repro.core.dispatch import ElasticDispatcher
+    return ElasticDispatcher(devices=jax.devices()[:(pool or members)],
+                             start_members=members, dispatch_ahead=ahead,
+                             retry_policy=policy, fault_injector=injector)
+
+
+def bench_overhead(B, chunk, n_vms, n_cloudlets, members, reps=8):
+    """Fault-free streamed_async, guarded vs unguarded, paired best-of.
+    The rep order REVERSES every rep (ABBA): on this shared 2-core box the
+    mode measured second inherits the first one's cache/thermal state, and
+    a fixed order turns that drift into a systematic bias of several
+    percent — far larger than the real guard cost."""
+    cfg, grid = _make(B, n_vms, n_cloudlets)
+    guarded_policy = RetryPolicy(check_finite=True, chunk_timeout_s=300.0)
+    disp = {"fault_unguarded": _dispatcher(members),
+            "fault_guarded": _dispatcher(members, policy=guarded_policy)}
+    best = {}
+    for m in disp:                         # compile both before measuring
+        run_scenario_grid(cfg, grid, dispatcher=disp[m], chunk=chunk)
+    for rep in range(reps):
+        order = list(disp) if rep % 2 == 0 else list(disp)[::-1]
+        for m in order:
+            r = run_scenario_grid(cfg, grid, dispatcher=disp[m], chunk=chunk)
+            w = r.timings["batch_total"]
+            if m not in best or w < best[m]:
+                best[m] = w
+    overhead = best["fault_guarded"] / best["fault_unguarded"] - 1.0
+    entries = [{"core": m, "n_scenarios": B, "n_vms": n_vms,
+                "n_cloudlets": n_cloudlets, "n_members": members,
+                "chunk": chunk, "scan_s": best[m]} for m in disp]
+    for e in entries:
+        emit(f"fault/{e['core']}/B{B}", e["scan_s"] * 1e6,
+             f"{B / e['scan_s']:.0f} scenarios/s")
+    emit("fault/overhead", overhead * 1e6, f"{overhead * 100:+.2f}%")
+    return {"entries": entries, "overhead_pct": overhead * 100.0}
+
+
+def bench_recovery(B, chunk, n_vms, n_cloudlets):
+    """One injected failure per kind mid-stream of the scenario grid; the
+    report's structured failure/recovery records carry the latency."""
+    cfg, grid = _make(B, n_vms, n_cloudlets)
+    mid = max((B // chunk) // 2, 0)
+    out = []
+
+    # calibrate a stall deadline off the fault-free per-chunk wall so a
+    # loaded box never trips it on legitimate chunks
+    d0 = _dispatcher(1)
+    r0 = run_scenario_grid(cfg, grid, dispatcher=d0, chunk=chunk)
+    per_chunk = r0.timings["batch_total"] / max(r0.dispatch["n_chunks"], 1)
+    deadline = max(8.0 * per_chunk, 0.5)
+
+    members = 2 if len(jax.devices()) >= 2 else 1
+    kinds = {
+        "member_crash": (FaultSpec("member_crash", chunk=mid, member=1),
+                         RetryPolicy(), members),
+        "nan_poison": (FaultSpec("nan_poison", chunk=mid, member=0),
+                       RetryPolicy(check_finite=True), 1),
+        "stall": (FaultSpec("stall", chunk=mid, member=0,
+                            delay_s=2.0 * deadline),
+                  RetryPolicy(chunk_timeout_s=deadline), 1),
+        "compile_fail": (FaultSpec("compile_fail", chunk=mid),
+                         RetryPolicy(), 1),
+    }
+    if kinds["member_crash"][2] < 2:
+        del kinds["member_crash"]          # nothing to kill on one device
+    for kind, (spec, policy, m) in kinds.items():
+        inj = FaultInjector([spec])
+        # a spare device so member-crash recovery keeps the member count
+        d = _dispatcher(m, policy=policy, injector=inj, ahead=2,
+                        pool=min(m + 1, len(jax.devices())))
+        r = run_scenario_grid(cfg, grid, dispatcher=d, chunk=chunk)
+        rep = r.dispatch
+        entry = {"kind": kind, "n_scenarios": B, "n_members": m,
+                 "chunk": chunk, "failures": len(rep["failures"]),
+                 "retries": rep["retries"]}
+        if rep["recovery_events"]:
+            entry["recovery_s"] = rep["recovery_events"][0].get("recovery_s")
+            entry["replayed_chunks"] = len(
+                rep["recovery_events"][0]["replayed_chunks"])
+        if rep["failures"]:
+            entry["recovered_after_s"] = rep["failures"][-1].get(
+                "recovered_after_s")
+        latency = entry.get("recovery_s") or entry.get("recovered_after_s")
+        emit(f"fault/recover/{kind}", (latency or 0.0) * 1e6,
+             f"retries={rep['retries']}")
+        out.append(entry)
+    return out
+
+
+def main():
+    if smoke():
+        B, chunk, n_vms, n_cl = 8, 2, 16, 200
+    else:
+        B, chunk, n_vms, n_cl = 256, 32, 128, 2_000
+    n_dev = len(jax.devices())
+    overhead = bench_overhead(B, chunk, n_vms, n_cl, n_dev)
+    rec_B, rec_chunk = (8, 2) if smoke() else (64, 8)
+    recovery = bench_recovery(rec_B, rec_chunk, n_vms, n_cl)
+    return {"n_devices": n_dev, "overhead": overhead, "recovery": recovery}
+
+
+if __name__ == "__main__":
+    _path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         BENCH_JSON)
+    with open(_path, "w") as f:
+        json.dump(main(), f, indent=2)
+    print(f"wrote {_path}")

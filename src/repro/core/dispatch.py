@@ -57,12 +57,30 @@ retirement-to-retirement step times over a per-job-class calibrated
 pipeline BARRIER: drain in-flight chunks, rebalance, rebuild, resume — chunk
 boundaries and reduce order never change, so results stay bit-identical no
 matter how many chunks were in flight.
+
+FAILURE is a recoverable event at this layer, not a dead job (Hazelcast's
+defining property beyond elasticity is surviving member departure; see
+``core/faults.py`` and docs/robustness.md).  ``submit`` takes a
+``RetryPolicy`` (attempt budget, chunk deadline, backoff, quarantine) and an
+optional ``FaultInjector``; the previously-unused ``HealthMonitor`` is the
+detector (non-finite chunk outputs are its documented "member crash" signal,
+per-member launch walls feed ``straggler_skew``).  A detected member failure
+becomes a FORCED failure remesh — drain survivors' in-flight chunks, retire
+the dead device from the pool, rebalance the table and remesh grid onto the
+survivors — and the failed plus lost chunks are REPLAYED there.  Chunks are
+pure functions of (item slice, replicated operands) and the combine order is
+fixed by chunk INDEX, so a recovered stream is bit-identical to a fault-free
+run.  Unrecoverable jobs raise ``JobFailedError`` carrying the structured
+``DispatchReport`` (failures / retries / recovery_events); the dispatcher is
+left drained and reusable either way.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
+import warnings
 from typing import Callable, Deque, Dict, Hashable, List, Optional, Tuple
 
 import jax
@@ -71,9 +89,19 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.executor import DistributedExecutor
+from repro.core.faults import (CompileFailedError, FaultInjector,
+                               JobFailedError, MemberFailedError, RetryPolicy)
 from repro.core.grid import DataGrid
 from repro.core.partition import (DEFAULT_PARTITION_COUNT, PartitionTable,
                                   pad_to_shards, partition_weights_from_keys)
+
+
+class NonPow2ChunkWarning(UserWarning):
+    """A ``deterministic=True`` float-sum stream was chunked at a
+    non-power-of-two size: results are still deterministic FOR THIS chunking
+    (replays included) but are not bit-identical to runs using a DIFFERENT
+    chunk size — only equal power-of-two chunks form exact subtrees of the
+    global row-aligned reduction tree (see ``_chunk_tree_reduce``)."""
 
 
 # --------------------------------------------------------------- compile cache
@@ -237,6 +265,58 @@ def _chunk_tree_reduce(parts, combine):
     return out
 
 
+# ------------------------------------------------------- failure detection
+
+def _all_finite(tree) -> bool:
+    """Cheap post-retirement health probe: True iff every float leaf of a
+    chunk output is fully finite — the ``HealthMonitor`` docstring's "member
+    crash" signal.  One device reduction + one scalar sync per float leaf on
+    an ALREADY-RETIRED output (int leaves cannot encode NaN/Inf and are
+    skipped); the fault-free overhead is benchmarked in BENCH_fault.json."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if isinstance(leaf, np.ndarray):
+            if leaf.dtype.kind == "f" and not np.isfinite(leaf).all():
+                return False
+        elif jnp.issubdtype(leaf.dtype, jnp.floating):
+            if not bool(jnp.isfinite(leaf).all()):
+                return False
+    return True
+
+
+@jax.jit
+def _finite_probe(tree):
+    """One fused all-float-leaves-finite reduction, ENQUEUED at launch so it
+    overlaps the pipelined compute it guards — the validator only syncs the
+    resulting scalar, which by retirement time has already been computed.
+    Keeps the fault-free guarded overhead (BENCH_fault.json) to one device
+    scalar sync per chunk instead of per-leaf blocking round-trips."""
+    flags = [jnp.isfinite(leaf).all()
+             for leaf in jax.tree_util.tree_leaves(tree)
+             if jnp.issubdtype(leaf.dtype, jnp.floating)]
+    if not flags:
+        return jnp.asarray(True)
+    return functools.reduce(jnp.logical_and, flags)
+
+
+def _nonfinite_member(tree, n_rows: int, n_members: int) -> Optional[int]:
+    """Attribute a non-finite chunk output to a mesh slot: leaves keeping the
+    chunk's row-shaped leading dim map their first bad row to the member that
+    computed it (rows are range-sharded over the executor axis).  ``None``
+    when only row-free leaves (replicated aggregates) are corrupt — the
+    corruption is real but unattributable, so nothing is quarantined.  Host
+    work, on the failure path only."""
+    shard = max(n_rows // max(n_members, 1), 1)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind != "f" or arr.ndim < 1 or arr.shape[0] != n_rows:
+            continue
+        bad = ~np.isfinite(arr.reshape(n_rows, -1)).all(axis=1)
+        idx = np.nonzero(bad)[0]
+        if idx.size:
+            return min(int(idx[0]) // shard, max(n_members, 1) - 1)
+    return None
+
+
 # ------------------------------------------------------------ job descriptors
 
 @dataclasses.dataclass(frozen=True)
@@ -313,6 +393,14 @@ class DispatchReport:
     staged_device: int = 0               # chunks cut on device (slice_chunk)
     staged_host: int = 0                 # chunks sliced/padded host-side
     ema_step_s: float = 0.0              # last step-time EMA (auto_scale)
+    retries: int = 0                     # chunk replays this stream
+    # structured failure record: one dict per DETECTED failure —
+    # {chunk, kind, attempt, member, detail, wall_s, recovered_after_s}
+    failures: List[dict] = dataclasses.field(default_factory=list)
+    # one dict per forced failure remesh: the scale event's fields plus
+    # {cause, dead_member, dead_device, failed_chunk, replayed_chunks,
+    #  recovery_s} — recovery_s is detect-to-last-replayed-chunk-validated
+    recovery_events: List[dict] = dataclasses.field(default_factory=list)
 
     def summary(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
@@ -336,9 +424,11 @@ class ElasticDispatcher:
                  partition_count: Optional[int] = None,
                  chunk_size: Optional[int] = None,
                  cache_entries: int = 64, auto_scale: bool = False,
-                 dispatch_ahead: int = 2):
+                 dispatch_ahead: int = 2,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         from repro.core.elastic import ElasticController, entity_pad_multiple
-        from repro.core.health import HealthConfig
+        from repro.core.health import HealthConfig, HealthMonitor
 
         self.devices = list(devices if devices is not None else jax.devices())
         self.axis = axis
@@ -370,8 +460,20 @@ class ElasticDispatcher:
         self.grid: Optional[DataGrid] = None
         self.scale_events: List[dict] = []
         self._key_weights: Optional[np.ndarray] = None
-        # per-job-class calibrated IAS step-time targets (auto_scale)
+        # fault tolerance: default per-stream policy/injector (submit can
+        # override per call), devices retired by member failure, and a
+        # DEDICATED HealthMonitor fed one sample per validated chunk — kept
+        # separate from the controller's monitor so failure-path walls never
+        # pollute the voluntary scaler's load window
+        self.retry_policy = retry_policy
+        self.fault_injector = fault_injector
+        self.dead_devices: List = []
+        self.fault_monitor = HealthMonitor(hc)
+        # per-job-class calibrated IAS step-time targets (auto_scale);
+        # signatures pinned EXPLICITLY via calibrate_target survive the
+        # failure-path calibration reset, self-calibrated ones do not
         self.job_targets: Dict[Hashable, float] = {}
+        self._explicit_targets: set = set()
         # launched-but-unretired chunk outputs of the ACTIVE stream; the
         # remesh barrier drains it, exception cleanup clears it
         self._in_flight: Deque[Tuple] = collections.deque()
@@ -443,7 +545,7 @@ class ElasticDispatcher:
         return partition_weights_from_keys(self._key_weights,
                                            self.table.partition_count)
 
-    def _remesh(self, n: int) -> None:
+    def _remesh(self, n: int, reason: str = "scale") -> None:
         """The scale-event callback — a PIPELINE BARRIER: drain every
         in-flight chunk of the active stream, then rebalance table → retire
         exactly the outgoing geometry's executables (every registered
@@ -452,7 +554,9 @@ class ElasticDispatcher:
         (no old-geometry compute overlapping the new geometry's compiles)
         and is the only mid-stream synchronization the async pipeline does;
         chunk boundaries and reduce order are unaffected by how many chunks
-        were in flight, so results stay bit-identical."""
+        were in flight, so results stay bit-identical.  ``reason`` is
+        "scale" for voluntary IAS events, "member_failure" for the forced
+        remesh of the involuntary-departure path."""
         drained = self._drain_in_flight()
         old_mesh, axis = self.mesh, self.axis
         moved = self.table.rebalance(n, weights=self._partition_weights())
@@ -472,7 +576,52 @@ class ElasticDispatcher:
         self.scale_events.append(
             {"n_members": n, "moved_partitions": moved,
              "retired_cores": retired, "retired_jobs": retired_jobs,
-             "drained_in_flight": drained})
+             "drained_in_flight": drained, "reason": reason})
+
+    def _member_failure_remesh(self, device, slot: int, report) -> dict:
+        """The involuntary-departure path: retire ``device`` from the pool,
+        restore any backed-up grid entries from their neighbor replicas,
+        clamp the IAS ceiling to the survivors, and force a FAILURE REMESH
+        (same barrier as a voluntary scale event: rebalance table → retire
+        dead geometry's executables → rebuild mesh → re-home grid) onto
+        ``min(n_members, survivors)`` members.  Spare pool devices beyond
+        the mesh keep the member COUNT intact when possible — the Hazelcast
+        model, where a standby absorbs a departed member's partitions.
+        Returns the recorded scale event (reason "member_failure") for the
+        caller to extend with recovery details.  Raises ``JobFailedError``
+        when the survivors cannot carry the job (fewer than
+        ``min_instances``) — after first shrinking the dispatcher onto
+        whatever survived, so the MIDDLEWARE stays usable even when the JOB
+        is lost."""
+        if device in self.devices:
+            self.devices.remove(device)
+            self.dead_devices.append(device)
+        survivors = len(self.devices)
+        if survivors == 0:
+            raise JobFailedError(
+                "every member failed: no surviving devices", report)
+        restored = (self.grid.fail_over(slot)
+                    if self.grid is not None and self.grid.backup_count
+                    else [])
+        recoverable = survivors >= self.health_cfg.min_instances
+        if not recoverable:
+            # degrade the floor so the dispatcher itself stays remeshable;
+            # the job still fails loudly below
+            self.health_cfg.min_instances = survivors
+        self.health_cfg.max_instances = min(self.health_cfg.max_instances,
+                                            survivors)
+        n_new = min(self.n_members, survivors)
+        self.controller.force_instances(n_new)
+        self._remesh(n_new, reason="member_failure")
+        event = self.scale_events[-1]
+        if restored:
+            event["grid_restored"] = restored
+        if not recoverable:
+            raise JobFailedError(
+                f"member at slot {slot} (device {device}) failed; "
+                f"{survivors} survivor(s) < min_instances — job "
+                "unrecoverable", report)
+        return event
 
     @property
     def in_flight(self) -> int:
@@ -499,8 +648,11 @@ class ElasticDispatcher:
     def calibrate_target(self, job: DispatchJob, target_step_time: float
                          ) -> None:
         """Pin a job class's IAS step-time target explicitly (overrides the
-        first-sample self-calibration; ``job.target_step_time`` still wins)."""
+        first-sample self-calibration; ``job.target_step_time`` still wins).
+        Explicit pins survive the failure-path calibration reset — the
+        operator asserted the number, a dying stream can't falsify it."""
         self.job_targets[job.signature] = float(target_step_time)
+        self._explicit_targets.add(job.signature)
 
     def _job_target(self, job: DispatchJob, first_sample: float) -> float:
         """Resolve the job class's step-time target: the job's own >
@@ -522,7 +674,10 @@ class ElasticDispatcher:
                chunk: Optional[int] = None,
                on_chunk: Optional[Callable] = None,
                dispatch_ahead: Optional[int] = None,
-               deliver: str = "device") -> Tuple[object, DispatchReport]:
+               deliver: str = "device",
+               retry_policy: Optional[RetryPolicy] = None,
+               fault_injector: Optional[FaultInjector] = None
+               ) -> Tuple[object, DispatchReport]:
         """Stream ``items`` (a pytree of arrays sharing leading dim B)
         through ``job`` in fixed-shape chunks, as an ASYNC double-buffered
         pipeline.
@@ -567,7 +722,18 @@ class ElasticDispatcher:
         another job; "host" materializes it at the reduce boundary — the
         right choice when the caller converts to numpy immediately (one
         gather instead of a sharded device concat PLUS a gather; the values
-        are bitwise identical either way).  Returns
+        are bitwise identical either way).
+
+        Fault tolerance: ``retry_policy`` / ``fault_injector`` (falling back
+        to the dispatcher-level defaults) arm the GUARDED retirement path —
+        every chunk is validated on retirement (deadline, optional finite
+        check), detected failures are retried under the policy's budget,
+        repeat-offender members are quarantined via a forced failure remesh,
+        and the failed plus lost in-flight chunks are REPLAYED; because the
+        combine below walks chunk INDEX order, a recovered stream is
+        bit-identical to a fault-free run.  Without either, the fault-free
+        fast path is byte-for-byte the unguarded pipeline.  Unrecoverable
+        streams raise ``JobFailedError`` carrying the report.  Returns
         ``(outputs, DispatchReport)``.
         """
         if deliver not in ("device", "host"):
@@ -602,15 +768,45 @@ class ElasticDispatcher:
         else:
             items_np = jax.tree_util.tree_map(np.asarray, items)
 
+        policy = (retry_policy if retry_policy is not None
+                  else self.retry_policy)
+        injector = (fault_injector if fault_injector is not None
+                    else self.fault_injector)
+        if policy is None:
+            # an injector without an explicit policy still needs a detector:
+            # default attempt budget with the finiteness probe armed
+            policy = RetryPolicy(check_finite=injector is not None)
+        guarded = injector is not None or policy.active
+        if job.deterministic and n_chunks > 1 and chunk & (chunk - 1) != 0:
+            warnings.warn(
+                f"deterministic float sum chunked at {chunk} (not a power of"
+                " two): results are deterministic and replay-stable for THIS"
+                " chunking but not bit-identical across chunk sizes — use a"
+                " power-of-two chunk for the cross-chunking guarantee",
+                NonPow2ChunkWarning, stacklevel=2)
+
         report = DispatchReport(job=job.name, n_items=B, chunk=chunk,
                                 n_chunks=n_chunks, dispatch_ahead=depth)
         hits0, builds0 = self.cache.hits, self.cache.builds
         events0 = len(self.scale_events)
-        parts = []           # per-chunk results, in chunk order: trimmed row
-        # outputs (concat) or partial aggregates (sum/max/deterministic)
+        # per-chunk results indexed by chunk: trimmed row outputs (concat) or
+        # partial aggregates (sum/max/deterministic).  A REPLAY overwrites
+        # its chunk's slot; the combine walks slots in chunk-index order, so
+        # retries and recoveries never perturb the reduce tree.
+        parts: List[Optional[Tuple[int, object]]] = [None] * n_chunks
         part_epochs = set()  # geometries the parts live on
         alpha = getattr(self.health_cfg, "ema_alpha", 0.4)
         stream = {"t_mark": None, "ema": None, "epoch": self._epoch}
+        queue: Deque[int] = collections.deque(range(n_chunks))
+        fired_cb: set = set()             # chunks whose on_chunk has run
+        attempts: Dict[int, int] = collections.Counter()
+        strikes: Dict = collections.Counter()  # retryable failures / device
+        # retired-but-unvalidated chunks (guarded path): mirrors _in_flight
+        # plus whatever a barrier drained before validation could run
+        pending_val: Deque[Tuple] = collections.deque()
+        open_recoveries: List[dict] = []  # member recoveries awaiting replays
+        fail_t: Dict[int, float] = {}     # chunk -> last failure detect time
+        val_step = [0]
 
         def mark(compiled: bool, t_launch: float):
             """Sample one per-chunk step time — the retirement-to-retirement
@@ -637,69 +833,255 @@ class ElasticDispatcher:
                                   / self._job_target(job, stream["ema"]))
 
         def retire_oldest():
-            """Block on the oldest launched chunk, then sample."""
+            """Block on the oldest launched chunk, then sample; the guarded
+            path validates every chunk that has left the flight queue."""
             _, out, compiled, t_launch = self._in_flight.popleft()
             jax.block_until_ready(out)
             mark(compiled, t_launch)
+            if guarded:
+                sync_validation()
+
+        def note_validated(ci: int, now: float):
+            """Close the books on a validated chunk: stamp the recovery
+            latency on its latest failure record and on any open
+            member-failure recovery awaiting its replay."""
+            t0 = fail_t.pop(ci, None)
+            if t0 is not None:
+                for rec in reversed(report.failures):
+                    if rec["chunk"] == ci and "recovered_after_s" not in rec:
+                        rec["recovered_after_s"] = now - t0
+                        break
+            for open_rec in open_recoveries[:]:
+                open_rec["outstanding"].discard(ci)
+                if not open_rec["outstanding"]:
+                    open_rec["event"]["recovery_s"] = now - open_rec["t0"]
+                    open_recoveries.remove(open_rec)
+
+        def recover_member(device, slot: int, failed_ci: int, cause: str):
+            """Member-failure recovery: the replay set is the failed chunk
+            plus every launched-but-unvalidated chunk (their buffers may
+            live on the dead member); drain the survivors, force the
+            failure remesh, and requeue the replays in ascending order."""
+            t0 = time.perf_counter()
+            lost = sorted({failed_ci}
+                          | {entry[0] for entry in pending_val}
+                          | {entry[0] for entry in self._in_flight})
+            self._drain_in_flight()
+            pending_val.clear()
+            strikes.pop(device, None)
+            event = self._member_failure_remesh(device, slot, report)
+            event.update({"cause": cause, "dead_member": slot,
+                          "dead_device": str(device),
+                          "failed_chunk": failed_ci,
+                          "replayed_chunks": lost})
+            report.recovery_events.append(event)
+            report.retries += len(lost)
+            open_recoveries.append(
+                {"event": event, "t0": t0, "outstanding": set(lost)})
+            for ci in reversed(lost):
+                queue.appendleft(ci)
+
+        def fail_chunk(ci: int, kind: str, member=None, detail: str = "",
+                       wall=None):
+            """Record one retryable chunk failure, enforce the attempt
+            budget, quarantine a repeat-offender member, back off, and
+            requeue the chunk for replay."""
+            attempts[ci] += 1
+            fail_t[ci] = time.perf_counter()
+            report.failures.append(
+                {"chunk": ci, "kind": kind, "attempt": attempts[ci],
+                 "member": member, "detail": detail, "wall_s": wall})
+            if attempts[ci] >= policy.max_attempts:
+                raise JobFailedError(
+                    f"chunk {ci} of job {job.name!r} failed {attempts[ci]}x"
+                    f" (last: {kind}); attempts exhausted (max_attempts="
+                    f"{policy.max_attempts})", report)
+            if member is not None and policy.quarantine_after > 0:
+                mesh_devices = self.executor.device_list
+                dev = mesh_devices[member % len(mesh_devices)]
+                strikes[dev] += 1
+                # quarantine only when the pool can afford to lose the
+                # member; otherwise keep retrying under the attempt budget
+                can_drop = (len(self.devices) - 1
+                            >= max(1, self.health_cfg.min_instances))
+                if strikes[dev] >= policy.quarantine_after and can_drop:
+                    recover_member(
+                        dev, member, ci,
+                        cause=(f"quarantined: {strikes[dev]} retryable "
+                               f"failures attributed to one member "
+                               f"(last: {kind})"))
+                    return
+            report.retries += 1
+            backoff = policy.backoff_for(attempts[ci])
+            if backoff > 0:
+                time.sleep(backoff)
+            queue.appendleft(ci)
+
+        def validate(ci, out, t_launch, M, L, fin=None):
+            """Guarded retirement: fire any scheduled stall, take the
+            chunk's wall, sync the finiteness probe (``fin``, enqueued at
+            launch — falls back to a blocking ``_all_finite`` when no probe
+            was dispatched), feed the detector monitor, and route detected
+            failures to ``fail_chunk``."""
+            delay, stall_slot = (injector.stall_for(ci) if injector
+                                 else (0.0, None))
+            if delay > 0:
+                time.sleep(delay)         # the hung launch: retirement late
+            now = time.perf_counter()
+            wall = now - t_launch
+            finite = True
+            if policy.check_finite or injector is not None:
+                finite = bool(fin) if fin is not None else _all_finite(out)
+            member_times = None
+            if stall_slot is not None:
+                member_times = [max(wall - delay, 0.0)] * M
+                member_times[stall_slot % M] = wall
+            val_step[0] += 1
+            self.fault_monitor.observe_chunk(
+                step=val_step[0], wall_s=wall, finite=finite,
+                member_times=member_times)
+            if not finite:
+                fail_chunk(ci, "nan_poison",
+                           member=_nonfinite_member(out, L, M),
+                           detail="non-finite chunk output", wall=wall)
+                return
+            if (policy.chunk_timeout_s is not None
+                    and wall > policy.chunk_timeout_s):
+                fail_chunk(
+                    ci, "stall", member=stall_slot,
+                    detail=(f"wall {wall:.3f}s exceeded deadline "
+                            f"{policy.chunk_timeout_s}s (straggler skew "
+                            f"{self.fault_monitor.straggler_skew():.2f})"),
+                    wall=wall)
+                return
+            note_validated(ci, now)
+
+        def sync_validation():
+            """Validate every chunk that has left the flight queue —
+            normal retirements AND remesh-barrier drains."""
+            while len(pending_val) > len(self._in_flight):
+                ci, out, t_launch, M, L, fin = pending_val.popleft()
+                validate(ci, out, t_launch, M, L, fin)
+
+        def launch(ci: int) -> bool:
+            """Stage + compile + dispatch chunk ``ci``.  Returns False when
+            a fault hook failed the launch (the chunk was requeued, or a
+            member recovery already re-queued the replay set)."""
+            lo, hi = ci * chunk, min((ci + 1) * chunk, B)
+            n_live = hi - lo
+            M = self.executor.n_members
+            L = pad_to_shards(chunk, M)
+            if injector is not None:
+                try:
+                    injector.on_launch(ci, self.executor.device_list)
+                except MemberFailedError as e:
+                    # the MEMBER failed, not the chunk: no attempt consumed
+                    report.failures.append(
+                        {"chunk": ci, "kind": "member_crash",
+                         "attempt": attempts[ci], "member": e.member,
+                         "detail": str(e), "wall_s": None})
+                    recover_member(e.device, e.member, ci,
+                                   cause="member crash detected at launch")
+                    return False
+            if on_device:
+                sl, valid = self.executor.slice_chunk(src, lo, L, n_live)
+                report.staged_device += 1
+            else:
+                sl, valid = self._stage_host(items_np, lo, n_live, L)
+                report.staged_host += 1
+            builds_before = self.cache.builds
+            try:
+                if injector is not None:
+                    injector.on_compile(ci)
+                fn = self._executable(job, sl, replicated, L)
+            except CompileFailedError as e:
+                fail_chunk(ci, "compile_fail", detail=str(e))
+                return False
+            compiled_now = self.cache.builds != builds_before
+            t_launch = time.perf_counter()
+            out = fn(sl, valid, *replicated)         # async dispatch
+            # (deterministic jobs: the executable itself tree-reduced
+            # the rows, so `out` is already the chunk partial)
+            if injector is not None:
+                out = injector.maybe_poison(ci, out, L, M)
+            if depth == 0:
+                # synchronous baseline (``streamed_sync``): materialize
+                # the chunk on host NOW — one blocking D2H per chunk,
+                # exactly the pre-async behavior this pipeline replaces
+                out = jax.tree_util.tree_map(np.asarray, out)
+                mark(compiled_now, t_launch)
+            else:
+                self._in_flight.append((ci, out, compiled_now, t_launch))
+                report.max_in_flight = max(report.max_in_flight,
+                                           len(self._in_flight))
+            # combine lazily, in chunk order — retirement (blocking) is
+            # decoupled from reduction, so order never depends on how
+            # many chunks are in flight.  concat rows are trimmed at the
+            # reduce boundary, not here: an eager mid-stream slice of an
+            # unevenly-sharded chunk would cost a per-chunk reshard
+            parts[ci] = (n_live, out)
+            part_epochs.add(self._epoch)
+            report.members_per_chunk.append(M)
+            if guarded:
+                if depth == 0:
+                    # sync baseline: out is already host numpy — the cheap
+                    # np fallback inside validate covers it
+                    validate(ci, out, t_launch, M, L)
+                else:
+                    fin = (_finite_probe(out)
+                           if policy.check_finite or injector is not None
+                           else None)
+                    pending_val.append((ci, out, t_launch, M, L, fin))
+            return True
 
         t_start = time.perf_counter()
         try:
-            for ci in range(n_chunks):
-                lo, hi = ci * chunk, min((ci + 1) * chunk, B)
-                n_live = hi - lo
-                M = self.executor.n_members
-                L = pad_to_shards(chunk, M)
-                if on_device:
-                    sl, valid = self.executor.slice_chunk(src, lo, L, n_live)
-                    report.staged_device += 1
-                else:
-                    sl, valid = self._stage_host(items_np, lo, n_live, L)
-                    report.staged_host += 1
-                builds_before = self.cache.builds
-                fn = self._executable(job, sl, replicated, L)
-                compiled_now = self.cache.builds != builds_before
-                t_launch = time.perf_counter()
-                out = fn(sl, valid, *replicated)         # async dispatch
-                # (deterministic jobs: the executable itself tree-reduced
-                # the rows, so `out` is already the chunk partial)
-                if depth == 0:
-                    # synchronous baseline (``streamed_sync``): materialize
-                    # the chunk on host NOW — one blocking D2H per chunk,
-                    # exactly the pre-async behavior this pipeline replaces
-                    out = jax.tree_util.tree_map(np.asarray, out)
-                    mark(compiled_now, t_launch)
-                else:
-                    self._in_flight.append((ci, out, compiled_now, t_launch))
-                    report.max_in_flight = max(report.max_in_flight,
-                                               len(self._in_flight))
-                # combine lazily, in chunk order — retirement (blocking) is
-                # decoupled from reduction, so order never depends on how
-                # many chunks are in flight.  concat rows are trimmed at the
-                # reduce boundary, not here: an eager mid-stream slice of an
-                # unevenly-sharded chunk would cost a per-chunk reshard
-                parts.append((n_live, out))
-                part_epochs.add(self._epoch)
-                report.members_per_chunk.append(M)
-                if on_chunk is not None:
+            while queue:
+                ci = queue.popleft()
+                if not launch(ci):
+                    continue
+                if on_chunk is not None and ci not in fired_cb:
+                    # scale schedules stay deterministic under faults: the
+                    # callback fires once per chunk INDEX, on its first
+                    # launch, never again on replays
+                    fired_cb.add(ci)
                     on_chunk(self, ci, n_chunks)
+                    if guarded:
+                        sync_validation()   # an on_chunk remesh drained
                 while len(self._in_flight) > depth:
                     retire_oldest()
-            if self.auto_scale and on_chunk is None:
-                # the IAS needs samples even from streams shorter than the
-                # pipeline depth: drain the tail WITH sampling (short
-                # streams fall back to launch-to-completion walls in mark)
-                while self._in_flight:
-                    retire_oldest()
-            else:
-                # lazy delivery: drop the queue without blocking — `parts`
-                # keeps the arrays alive, the in-flight bound was enforced
-                # chunk by chunk, and the caller blocks at its own reduce
-                # boundary (host delivery materializes right below anyway)
-                self._in_flight.clear()
+                if queue:
+                    continue
+                # tail of the stream (validation failures may refill queue)
+                if guarded or (self.auto_scale and on_chunk is None):
+                    # the IAS needs samples even from streams shorter than
+                    # the pipeline depth, and the guarded path must block
+                    # to validate: drain the tail WITH sampling (short
+                    # streams fall back to launch-to-completion walls)
+                    while self._in_flight and not queue:
+                        retire_oldest()
+                    if guarded and not queue:
+                        sync_validation()
+                else:
+                    # lazy delivery: drop the queue without blocking —
+                    # `parts` keeps the arrays alive, the in-flight bound
+                    # was enforced chunk by chunk, and the caller blocks at
+                    # its own reduce boundary (host delivery materializes
+                    # right below anyway)
+                    self._in_flight.clear()
+        except Exception:
+            # a dying stream must not poison the job class's IAS
+            # calibration: its compile/retry-inflated first sample would
+            # steer the NEXT stream's scaler (explicit calibrate_target
+            # pins survive — the operator asserted those)
+            if job.signature not in self._explicit_targets:
+                self.job_targets.pop(job.signature, None)
+            raise
         finally:
             # exception mid-stream (a failing on_chunk, a bad replicated
-            # operand): quiesce and forget every launched chunk so the
-            # dispatcher is reusable and no buffer outlives the stream
+            # operand, an unrecoverable fault): quiesce and forget every
+            # launched chunk so the dispatcher is reusable and no buffer
+            # outlives the stream
             self._drain_in_flight()
 
         # one geometry throughout, an async stream, and device delivery:

@@ -142,6 +142,19 @@ class ElasticController:
     def n_instances(self) -> int:
         return self.ias.state.n_instances
 
+    def force_instances(self, n: int, reason: str = "failure") -> None:
+        """Involuntary membership change (member failure/departure):
+        synchronize the IAS to the surviving member count WITHOUT a scaling
+        decision.  The change is recorded in the scaler history and starts
+        a fresh hysteresis window (``time_between_scaling``) so the scaler
+        doesn't immediately thrash on the post-recovery load transient.
+        Does NOT invoke ``remesh_fn`` — the caller owns the failure remesh
+        (it must drain in-flight work first)."""
+        st = self.ias.state
+        st.n_instances = max(1, min(n, self.cfg.max_instances))
+        st.last_scale_step = self._sim_step
+        st.history.append((self._sim_step, reason, st.n_instances))
+
     def tick(self, load: float) -> Decision:
         """Drive the scaler from a SIMULATION-side load signal: callers with
         no training step loop (e.g. the elastic DES cluster) feed one

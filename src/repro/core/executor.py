@@ -46,6 +46,13 @@ class DistributedExecutor:
     def n_members(self) -> int:
         return self.mesh.shape[self.axis]
 
+    @property
+    def device_list(self):
+        """The devices backing this executor's mesh in axis order — the
+        member-slot → device map the dispatcher's fault-injection launch
+        hook consumes (slot i of the mesh is device_list[i])."""
+        return list(self.mesh.devices.ravel())
+
     def sharding(self, spec: P) -> NamedSharding:
         """A NamedSharding on this executor's mesh — the placement vocabulary
         the dispatcher's auto-SPMD (global_fn) path speaks."""

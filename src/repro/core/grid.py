@@ -117,6 +117,21 @@ class DataGrid:
         self._store[name] = dataclasses.replace(e, value=out)
         return out
 
+    def fail_over(self, lost_member: int) -> list:
+        """Member-failure recovery sweep: restore EVERY entry holding a
+        synchronous backup from its neighbor's replica (Hazelcast's
+        partition fail-over — the backup owner promotes its copy when a
+        member departs).  Returns the restored names; entries without
+        backups are left untouched.  The dispatcher calls this BEFORE the
+        failure remesh so restored values re-home onto the survivor mesh
+        like any other entry."""
+        restored = []
+        for name, e in list(self._store.items()):
+            if e.backup is not None:
+                self.restore_from_backup(name, lost_member)
+                restored.append(name)
+        return restored
+
     # ------------------------------------------------------------ elasticity
     def remesh(self, mesh: Mesh) -> int:
         """Elastic re-shard (scale event): re-home every entry onto the new

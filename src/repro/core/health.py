@@ -53,6 +53,20 @@ class HealthMonitor:
             self.events.append(f"step {sample.step}: NON-FINITE "
                                f"(loss={sample.loss}, gnorm={sample.grad_norm})")
 
+    def observe_chunk(self, step: int, wall_s: float, finite: bool = True,
+                      member_times: Optional[List[float]] = None
+                      ) -> HealthSample:
+        """Dispatcher-side detector feed: one validated chunk becomes one
+        sample.  A non-finite chunk output is recorded as ``loss=NaN`` —
+        this module's documented "member crash" signal — so ``is_healthy()``
+        flips and ``events`` logs the step; per-member launch walls feed
+        ``straggler_skew`` (the stall/hang signal)."""
+        sample = HealthSample(step=step, step_time=wall_s,
+                              loss=(0.0 if finite else float("nan")),
+                              member_times=member_times)
+        self.observe(sample)
+        return sample
+
     # --------------------------------------------------------------- views
     def load(self) -> float:
         """Smoothed load in [0, inf): step_time / target (≈ process CPU load)."""

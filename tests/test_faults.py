@@ -1,0 +1,424 @@
+"""Fault-tolerant dispatch: injection, detection, retry, member recovery.
+
+Fast deterministic tier-1 coverage of every fault kind once (PR acceptance),
+the member-killed-at-EVERY-chunk-index bit-identical-replay acceptance test
+(subprocess, 8 fake devices), the two satellite bugfix regressions
+(non-pow2 deterministic chunk warning; failure-path calibration reset), and
+a slow-marked hypothesis chaos test over randomized fault schedules.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.dispatch import (DispatchJob, ElasticDispatcher,
+                                 NonPow2ChunkWarning)
+from repro.core.faults import (FAULT_KINDS, CompileFailedError, FaultInjector,
+                               FaultSpec, JobFailedError, MemberFailedError,
+                               RetryPolicy)
+from repro.core.health import HealthConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _job():
+    return DispatchJob(name="affine", signature="affine",
+                       member_fn=lambda x, v, w: x * w + 1.0,
+                       reduce="concat")
+
+
+def _items(n=32):
+    return np.arange(n * 2, dtype=np.float32).reshape(n, 2)
+
+
+def _ref(items, w):
+    return np.asarray(items) * w + 1.0
+
+
+# ---------------------------------------------------------------- unit layer
+
+def test_fault_spec_and_policy_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meteor_strike", chunk=0)
+    with pytest.raises(ValueError):
+        FaultSpec(kind="stall", chunk=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(chunk_timeout_s=0.0)
+    assert not RetryPolicy().active
+    assert RetryPolicy(chunk_timeout_s=1.0).active
+    assert RetryPolicy(check_finite=True).active
+    p = RetryPolicy(backoff_s=0.1, backoff_factor=2.0)
+    assert p.backoff_for(1) == pytest.approx(0.1)
+    assert p.backoff_for(3) == pytest.approx(0.4)
+
+
+def test_random_schedule_is_reproducible():
+    a = FaultInjector.random_schedule(seed=7, n_chunks=10, max_members=4,
+                                      n_faults=5)
+    b = FaultInjector.random_schedule(seed=7, n_chunks=10, max_members=4,
+                                      n_faults=5)
+    assert [vars(s) for s in a.schedule] == [vars(s) for s in b.schedule]
+    c = FaultInjector.random_schedule(seed=8, n_chunks=10, max_members=4,
+                                      n_faults=5)
+    assert [vars(s) for s in a.schedule] != [vars(s) for s in c.schedule]
+    for s in a.schedule:
+        assert s.kind in FAULT_KINDS and 0 <= s.chunk < 10
+
+
+def test_injector_hooks_fire_once_and_log():
+    inj = FaultInjector([FaultSpec("compile_fail", chunk=2)])
+    inj.on_compile(0)                      # wrong chunk: no fire
+    with pytest.raises(CompileFailedError):
+        inj.on_compile(2)
+    inj.on_compile(2)                      # consumed: fires once
+    assert inj.fired == [{"kind": "compile_fail", "chunk": 2, "member": None}]
+    assert inj.pending() == {}
+
+    import jax
+    inj2 = FaultInjector([FaultSpec("member_crash", chunk=1, member=0)])
+    devs = jax.devices()[:1]
+    inj2.on_launch(0, devs)
+    with pytest.raises(MemberFailedError):
+        inj2.on_launch(1, devs)
+    # the dead member keeps failing launches until retired from the mesh
+    with pytest.raises(MemberFailedError):
+        inj2.on_launch(2, devs)
+
+
+# ---------------------------------------- one fast deterministic test / kind
+
+def test_nan_poison_detected_retried_bit_identical():
+    job, items, w = _job(), _items(), np.float32(2.0)
+    d0 = ElasticDispatcher(start_members=1, dispatch_ahead=0)
+    ref, _ = d0.submit(job, items, replicated=(w,), chunk=4, deliver="host")
+    np.testing.assert_array_equal(np.asarray(ref), _ref(items, 2.0))
+
+    inj = FaultInjector([FaultSpec("nan_poison", chunk=2, member=0)])
+    d = ElasticDispatcher(start_members=1, dispatch_ahead=2,
+                          fault_injector=inj)
+    out, rep = d.submit(job, items, replicated=(w,), chunk=4, deliver="host")
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    assert [f["kind"] for f in rep.failures] == ["nan_poison"]
+    assert rep.failures[0]["chunk"] == 2 and rep.failures[0]["member"] == 0
+    assert "recovered_after_s" in rep.failures[0]
+    assert rep.retries == 1 and d.in_flight == 0
+    # the detector monitor logged the non-finite sample (health.py's own
+    # "member crash" signal, finally wired in)
+    assert any("NON-FINITE" in e for e in d.fault_monitor.events)
+
+
+def test_stall_deadline_detected_and_replayed():
+    job, items, w = _job(), _items(), np.float32(3.0)
+    inj = FaultInjector([FaultSpec("stall", chunk=1, member=0, delay_s=0.8)])
+    d = ElasticDispatcher(start_members=1, dispatch_ahead=2,
+                          fault_injector=inj,
+                          retry_policy=RetryPolicy(chunk_timeout_s=0.6,
+                                                   quarantine_after=0))
+    # prewarm so genuine compile walls don't trip the tight deadline
+    d.submit(job, items, replicated=(w,), chunk=4, deliver="host",
+             fault_injector=FaultInjector())
+    out, rep = d.submit(job, items, replicated=(w,), chunk=4, deliver="host")
+    np.testing.assert_array_equal(np.asarray(out), _ref(items, 3.0))
+    stalls = [f for f in rep.failures if f["kind"] == "stall"]
+    assert stalls and stalls[0]["chunk"] == 1
+    assert stalls[0]["wall_s"] > 0.6
+    assert d.in_flight == 0
+
+
+def test_compile_fail_retried():
+    job, items, w = _job(), _items(), np.float32(1.5)
+    inj = FaultInjector([FaultSpec("compile_fail", chunk=0)])
+    d = ElasticDispatcher(start_members=1, dispatch_ahead=2,
+                          fault_injector=inj)
+    out, rep = d.submit(job, items, replicated=(w,), chunk=4, deliver="host")
+    np.testing.assert_array_equal(np.asarray(out), _ref(items, 1.5))
+    assert [f["kind"] for f in rep.failures] == ["compile_fail"]
+    assert inj.pending() == {}
+
+
+def test_attempts_exhausted_raises_jobfailed_with_report_and_reusable():
+    job, items, w = _job(), _items(), np.float32(2.0)
+    inj = FaultInjector([FaultSpec("nan_poison", chunk=1, times=10)])
+    d = ElasticDispatcher(start_members=1, dispatch_ahead=2,
+                          fault_injector=inj,
+                          retry_policy=RetryPolicy(max_attempts=3,
+                                                   quarantine_after=0,
+                                                   check_finite=True))
+    with pytest.raises(JobFailedError) as exc:
+        d.submit(job, items, replicated=(w,), chunk=4, deliver="host")
+    rep = exc.value.report
+    assert len(rep.failures) == 3 and rep.retries == 2
+    assert all(f["chunk"] == 1 for f in rep.failures)
+    assert d.in_flight == 0
+    # drained and reusable: a clean stream on the same dispatcher succeeds
+    out, rep2 = d.submit(job, items, replicated=(w,), chunk=4, deliver="host",
+                         fault_injector=FaultInjector())
+    np.testing.assert_array_equal(np.asarray(out), _ref(items, 2.0))
+    assert rep2.failures == []
+
+
+def test_check_finite_catches_natural_nan_without_injector():
+    """The detector is not injection-only: a job that genuinely emits NaN
+    trips the same guarded path under a bare RetryPolicy."""
+    bad = DispatchJob(name="bad", signature="bad",
+                      member_fn=lambda x, v, *_: x / 0.0 * 0.0,  # NaN rows
+                      reduce="concat")
+    d = ElasticDispatcher(start_members=1, dispatch_ahead=2,
+                          retry_policy=RetryPolicy(max_attempts=2,
+                                                   quarantine_after=0,
+                                                   check_finite=True))
+    with pytest.raises(JobFailedError) as exc:
+        d.submit(bad, _items(8), chunk=4, deliver="host")
+    assert exc.value.report.failures
+    assert exc.value.report.failures[0]["kind"] == "nan_poison"
+    assert d.in_flight == 0
+
+
+# ------------------------------------------------------ satellite regressions
+
+def test_non_pow2_deterministic_chunk_warns():
+    job = DispatchJob(name="det", signature="det2", reduce="sum",
+                      deterministic=True, member_fn=lambda x, v, *_: x)
+    d = ElasticDispatcher(start_members=1)
+    x = np.ones((10, 3), np.float32)
+    with pytest.warns(NonPow2ChunkWarning):
+        d.submit(job, x, chunk=3)
+    # pow2 chunkings and single-chunk streams stay silent
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", NonPow2ChunkWarning)
+        d.submit(job, x, chunk=4)
+        d.submit(job, x, chunk=10)         # one chunk: nothing to cross
+
+
+def test_failure_resets_self_calibrated_target_not_explicit():
+    """Regression (satellite): a failing stream's compile/retry-inflated
+    self-calibration must not leak into the next stream's IAS target;
+    explicit calibrate_target pins survive."""
+    job, items = _job(), _items(8)
+    d = ElasticDispatcher(start_members=1, auto_scale=True, dispatch_ahead=0)
+
+    def boom(disp, ci, n):
+        if ci == 1:
+            raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        d.submit(job, items, replicated=(np.float32(1.0),), chunk=2,
+                 on_chunk=boom)
+    assert job.signature not in d.job_targets   # poisoned calibration dropped
+    assert d.in_flight == 0
+
+    d.calibrate_target(job, 123.0)
+    with pytest.raises(RuntimeError):
+        d.submit(job, items, replicated=(np.float32(1.0),), chunk=2,
+                 on_chunk=boom)
+    assert d.job_targets[job.signature] == 123.0   # explicit pin survives
+
+    # JobFailedError takes the same reset path
+    d2 = ElasticDispatcher(start_members=1, auto_scale=True, dispatch_ahead=2,
+                           fault_injector=FaultInjector(
+                               [FaultSpec("nan_poison", chunk=0, times=10)]),
+                           retry_policy=RetryPolicy(max_attempts=2,
+                                                    quarantine_after=0,
+                                                    check_finite=True))
+    with pytest.raises(JobFailedError):
+        d2.submit(job, items, replicated=(np.float32(1.0),), chunk=2)
+    assert job.signature not in d2.job_targets
+
+
+# ------------------------------------------------- member failure (multi-dev)
+
+def test_member_crash_recovery_bit_identical_every_chunk_index():
+    """THE acceptance test: a member killed at EVERY chunk index of an
+    8-chunk async stream (dispatch_ahead=2) riding a 1→2→4→2 scale
+    sequence recovers — forced failure remesh onto the survivors, lost
+    in-flight chunks replayed — with results bit-identical to the
+    fault-free synchronous path; and when the survivors can't carry the
+    job, JobFailedError is raised and the dispatcher stays reusable."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.dispatch import DispatchJob, ElasticDispatcher
+from repro.core.faults import FaultInjector, FaultSpec, JobFailedError
+from repro.core.health import HealthConfig
+
+# the per-row contribution ends in sqrt so XLA cannot fuse the producer
+# into the reduction adds as FMA — member-count-stable like word_weight's
+# scatter (see docs/robustness.md on the fusion caveat)
+job = DispatchJob(name="det", signature="det", reduce="sum",
+                  deterministic=True,
+                  member_fn=lambda x, v, w: jnp.sqrt(x * x + w))
+rng = np.random.RandomState(0)
+items = (rng.randn(32, 4) * 10 ** rng.uniform(-2, 2, (32, 4))).astype(
+    np.float32)
+w = np.float32(1.7)
+
+def hc():
+    return HealthConfig(target_step_time=1.0, max_threshold=0.8,
+                        min_threshold=0.2, time_between_scaling=1,
+                        window=1, max_instances=4)
+
+def feeder(seq):
+    it = iter(seq)
+    def on_chunk(disp, ci, n):
+        l = next(it, None)
+        if l is not None:
+            disp.observe_load(l)
+    return on_chunk
+
+LOADS = [2.0, 2.0, 0.05]          # 1 -> 2 -> 4 -> 2 across the stream
+
+# fault-free synchronous oracle (deterministic sum: member-count invariant)
+d0 = ElasticDispatcher(devices=jax.devices()[:1], health_cfg=hc(),
+                       start_members=1, dispatch_ahead=0)
+ref = np.asarray(d0.submit(job, items, replicated=(w,), chunk=4,
+                           deliver="host")[0])
+
+for kill_at in range(8):
+    inj = FaultInjector([FaultSpec("member_crash", chunk=kill_at, member=0)])
+    d = ElasticDispatcher(devices=jax.devices(), health_cfg=hc(),
+                          start_members=1, dispatch_ahead=2,
+                          fault_injector=inj)
+    out, rep = d.submit(job, items, replicated=(w,), chunk=4, deliver="host",
+                        on_chunk=feeder(LOADS))
+    assert np.array_equal(np.asarray(out), ref), (kill_at, np.asarray(out))
+    assert rep.n_chunks == 8 and d.in_flight == 0
+    assert len(rep.recovery_events) == 1, (kill_at, rep.recovery_events)
+    ev = rep.recovery_events[0]
+    assert ev["reason"] == "member_failure" and ev["failed_chunk"] == kill_at
+    assert kill_at in ev["replayed_chunks"]
+    assert ev.get("recovery_s", 0) > 0, ev
+    assert rep.retries >= 1
+    assert [f["kind"] for f in rep.failures] == ["member_crash"]
+    # the stream still rode voluntary scale events around the failure one
+    assert any(e["reason"] == "scale" for e in d.scale_events), d.scale_events
+print("EVERY-INDEX OK")
+
+# spare-pool semantics: the dead device left the pool, a spare absorbed it
+assert len(d.devices) == 7 and len(d.dead_devices) == 1
+
+# survivors < min_instances: loud JobFailedError, dispatcher degrades but
+# stays reusable
+hc2 = HealthConfig(target_step_time=1.0, time_between_scaling=1, window=1,
+                   min_instances=2, max_instances=2)
+inj = FaultInjector([FaultSpec("member_crash", chunk=3, member=1)])
+d = ElasticDispatcher(devices=jax.devices()[:2], health_cfg=hc2,
+                      start_members=2, dispatch_ahead=2, fault_injector=inj)
+try:
+    d.submit(job, items, replicated=(w,), chunk=4, deliver="host")
+    raise SystemExit("expected JobFailedError")
+except JobFailedError as e:
+    assert e.report.failures and e.report.failures[0]["kind"] == "member_crash"
+assert d.in_flight == 0 and d.n_members == 1
+out, rep = d.submit(job, items, replicated=(w,), chunk=4, deliver="host")
+assert np.array_equal(np.asarray(out), ref)       # degraded but correct
+print("EXHAUSTION OK")
+
+# quarantine: repeated poison attributed to one member of a 2-member mesh
+# forces the failure remesh (concat job keeps the row dim for attribution)
+cjob = DispatchJob(name="rows", signature="rows",
+                   member_fn=lambda x, v, w: x * w, reduce="concat")
+cref = np.asarray(items) * w
+hc3 = HealthConfig(target_step_time=1.0, time_between_scaling=1, window=1,
+                   min_instances=1, max_instances=2)
+inj = FaultInjector([FaultSpec("nan_poison", chunk=2, member=1, times=2)])
+from repro.core.faults import RetryPolicy
+d = ElasticDispatcher(devices=jax.devices()[:4], health_cfg=hc3,
+                      start_members=2, dispatch_ahead=2, fault_injector=inj,
+                      retry_policy=RetryPolicy(quarantine_after=2,
+                                               max_attempts=5,
+                                               check_finite=True))
+out, rep = d.submit(cjob, items, replicated=(w,), chunk=4, deliver="host")
+assert np.array_equal(np.asarray(out), cref)
+assert len(rep.recovery_events) == 1, rep.recovery_events
+assert "quarantined" in rep.recovery_events[0]["cause"]
+print("QUARANTINE OK")
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_grid_fail_over_restores_backed_up_entries():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.grid import DataGrid
+
+g = DataGrid(Mesh(np.array(jax.devices()[:4]), ("data",)), backup_count=1)
+g.put("a", jnp.arange(8.0))
+g.put("b", jnp.arange(16.0).reshape(8, 2))
+restored = g.fail_over(lost_member=2)
+assert restored == ["a", "b"], restored
+assert np.array_equal(np.asarray(g.get("a")), np.arange(8.0))
+assert np.array_equal(np.asarray(g.get("b")), np.arange(16.0).reshape(8, 2))
+g2 = DataGrid(Mesh(np.array(jax.devices()[:4]), ("data",)))  # no backups
+g2.put("c", jnp.arange(8.0))
+assert g2.fail_over(lost_member=0) == []
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=600)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+# ------------------------------------------------------------- chaos (slow)
+
+def _chaos_case(seed, n_faults, max_attempts, job, items, w, ref):
+    """One chaos example: a seeded random fault schedule either recovers
+    BIT-IDENTICALLY or fails loudly with a populated report — and the
+    dispatcher is reusable either way.  member_crash is exercised by the
+    multi-device subprocess tests; in-process there is one real device, so
+    killing it could only ever fail."""
+    inj = FaultInjector.random_schedule(
+        seed=seed, n_chunks=6, max_members=1, n_faults=n_faults,
+        kinds=("nan_poison", "stall", "compile_fail"), stall_delay_s=0.05)
+    d = ElasticDispatcher(start_members=1, dispatch_ahead=2,
+                          fault_injector=inj,
+                          retry_policy=RetryPolicy(max_attempts=max_attempts,
+                                                   quarantine_after=0,
+                                                   check_finite=True))
+    try:
+        out, rep = d.submit(job, items, replicated=(w,), chunk=4,
+                            deliver="host")
+        assert np.array_equal(np.asarray(out), ref)
+    except JobFailedError as e:
+        assert e.report.failures                # loud, with the evidence
+    assert d.in_flight == 0
+    # reusable: a fault-free stream on the same dispatcher still works
+    out2, _ = d.submit(job, items, replicated=(w,), chunk=4,
+                       deliver="host", fault_injector=FaultInjector())
+    assert np.array_equal(np.asarray(out2), ref)
+
+
+@pytest.mark.slow
+def test_chaos_schedules_recover_or_fail_loudly():
+    """Randomized chaos over (kind × chunk × member × retry budget):
+    hypothesis-driven when available, a seeded sweep otherwise (the
+    schedules themselves are always derived reproducibly from the seed)."""
+    job, items, w = _job(), _items(24), np.float32(2.0)
+    d0 = ElasticDispatcher(start_members=1, dispatch_ahead=0)
+    ref = np.asarray(d0.submit(job, items, replicated=(w,), chunk=4,
+                               deliver="host")[0])
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        for seed in range(12):
+            _chaos_case(seed, 1 + seed % 4, 1 + seed % 3,
+                        job, items, w, ref)
+        return
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6),
+           n_faults=st.integers(1, 4),
+           max_attempts=st.integers(1, 3))
+    def run(seed, n_faults, max_attempts):
+        _chaos_case(seed, n_faults, max_attempts, job, items, w, ref)
+
+    run()
