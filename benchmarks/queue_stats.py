@@ -1,0 +1,92 @@
+"""Queueing observability — per-stage latency percentiles of the pipeline.
+
+Streams the scenario-grid workload through an instrumented dispatcher
+(``collect_stats=True``) and records, per (chunk, members) cell, the
+decomposed latency percentiles the stats layer measures — queue wait and
+service p50/p99, utilization, time-averaged queue length — alongside the
+total wall (``scan_s``, so ``run.py --check`` gates the instrumented path
+against the committed ``BENCH_queue.json`` like every other benchmark; the
+percentile fields are informational).
+"""
+import json
+import os
+import sys
+
+if __package__ in (None, ""):   # standalone: python benchmarks/queue_stats.py
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    _root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, smoke
+from repro.core.cloudsim import SimulationConfig
+from repro.core.des_scan import make_scenario_grid, run_scenario_grid
+
+BENCH_JSON = "BENCH_queue.json"
+
+
+def _make(B: int, n_vms: int, n_cloudlets: int):
+    cfg = SimulationConfig(n_vms=n_vms, n_cloudlets=n_cloudlets)
+    grid = make_scenario_grid(
+        seeds=range(max(1, -(-B // 8))), mi_scales=[0.75, 1.5],
+        vm_counts=[n_vms // 2, n_vms], mips_dists=["uniform", "fixed"])
+    grid = {k: np.asarray(v)[:B] for k, v in grid.items()}
+    assert len(grid["seeds"]) == B
+    return cfg, grid
+
+
+def bench_cell(B, chunk, members, n_vms, n_cloudlets, reps=3):
+    """One (chunk, members) cell: best-of-``reps`` wall with the collector
+    on, plus that run's measured stage decomposition."""
+    from repro.core.dispatch import ElasticDispatcher
+    cfg, grid = _make(B, n_vms, n_cloudlets)
+    d = ElasticDispatcher(devices=jax.devices()[:members],
+                          start_members=members, dispatch_ahead=4,
+                          collect_stats=True)
+    run_scenario_grid(cfg, grid, dispatcher=d, chunk=chunk)   # compile
+    best = None
+    for _ in range(reps):
+        r = run_scenario_grid(cfg, grid, dispatcher=d, chunk=chunk)
+        w = r.timings["batch_total"]
+        if best is None or w < best[0]:
+            best = (w, r.dispatch["stats"])
+    wall, stats = best
+    q = stats["queue"]
+    entry = {"core": "queue_stats", "n_scenarios": B, "n_vms": n_vms,
+             "n_cloudlets": n_cloudlets, "n_members": members,
+             "chunk": chunk, "scan_s": wall,
+             "queue_wait_p50": stats["queue_wait"]["p50"],
+             "queue_wait_p99": stats["queue_wait"]["p99"],
+             "service_p50": stats["service"]["p50"],
+             "service_p99": stats["service"]["p99"],
+             "utilization": q["utilization"],
+             "mean_queue_length": q["mean_queue_length"],
+             "throughput": q["throughput"]}
+    emit(f"queue/c{chunk}/M{members}", wall * 1e6,
+         f"svc_p50={stats['service']['p50'] * 1e6:.0f}us "
+         f"wait_p99={stats['queue_wait']['p99'] * 1e6:.0f}us")
+    return entry
+
+
+def main():
+    if smoke():
+        B, n_vms, n_cl, chunks = 8, 16, 200, (2, 4)
+    else:
+        B, n_vms, n_cl, chunks = 64, 64, 1_000, (8, 32)
+    n_dev = len(jax.devices())
+    member_counts = sorted({1, min(8, n_dev)})
+    entries = [bench_cell(B, chunk, m, n_vms, n_cl)
+               for chunk in chunks for m in member_counts]
+    return {"n_devices": n_dev, "entries": entries}
+
+
+if __name__ == "__main__":
+    _path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         BENCH_JSON)
+    with open(_path, "w") as f:
+        json.dump(main(), f, indent=2)
+    print(f"wrote {_path}")

@@ -79,6 +79,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import math
 import time
 import warnings
 from typing import Callable, Deque, Dict, Hashable, List, Optional, Tuple
@@ -94,6 +95,7 @@ from repro.core.faults import (CompileFailedError, FaultInjector,
 from repro.core.grid import DataGrid
 from repro.core.partition import (DEFAULT_PARTITION_COUNT, PartitionTable,
                                   pad_to_shards, partition_weights_from_keys)
+from repro.core.stats import DispatchStats, QueueSnapshot
 
 
 class NonPow2ChunkWarning(UserWarning):
@@ -401,6 +403,13 @@ class DispatchReport:
     # {cause, dead_member, dead_device, failed_chunk, replayed_chunks,
     #  recovery_s} — recovery_s is detect-to-last-replayed-chunk-validated
     recovery_events: List[dict] = dataclasses.field(default_factory=list)
+    # queueing-theoretic observability (``collect_stats`` / policy="mmn"):
+    # per-stage latency decomposition (queue_wait / service / validate /
+    # sojourn: windowed mean + percentiles, log-bucket histogram quantiles),
+    # stall records, and the operational-law queue view (arrival rate,
+    # throughput, utilization, mean queue length) — see repro/core/stats.py
+    # and docs/observability.md.  None when instrumentation is off.
+    stats: Optional[dict] = None
 
     def summary(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
@@ -426,7 +435,8 @@ class ElasticDispatcher:
                  cache_entries: int = 64, auto_scale: bool = False,
                  dispatch_ahead: int = 2,
                  retry_policy: Optional[RetryPolicy] = None,
-                 fault_injector: Optional[FaultInjector] = None):
+                 fault_injector: Optional[FaultInjector] = None,
+                 collect_stats: bool = False):
         from repro.core.elastic import ElasticController, entity_pad_multiple
         from repro.core.health import HealthConfig, HealthMonitor
 
@@ -439,7 +449,14 @@ class ElasticDispatcher:
         hc = health_cfg or HealthConfig()
         hc = dataclasses.replace(
             hc, max_instances=min(hc.max_instances, len(self.devices)))
+        if hc.policy not in ("ema", "mmn"):
+            raise ValueError(f"unknown HealthConfig.policy {hc.policy!r}; "
+                             "expected 'ema' or 'mmn'")
         self.health_cfg = hc
+        # queueing observability: stamp every chunk's pipeline stages and
+        # expose DispatchReport.stats.  The mmn scaling policy NEEDS the
+        # measured service decomposition, so it forces collection on.
+        self.collect_stats = collect_stats or hc.policy == "mmn"
         # ENTITY sizes pad to this multiple so shapes are identical at every
         # member count the IAS can reach (bit-stable scale events for the
         # elastic cluster).  Chunk streams don't need it: each geometry pads
@@ -676,7 +693,8 @@ class ElasticDispatcher:
                dispatch_ahead: Optional[int] = None,
                deliver: str = "device",
                retry_policy: Optional[RetryPolicy] = None,
-               fault_injector: Optional[FaultInjector] = None
+               fault_injector: Optional[FaultInjector] = None,
+               collect_stats: Optional[bool] = None
                ) -> Tuple[object, DispatchReport]:
         """Stream ``items`` (a pytree of arrays sharing leading dim B)
         through ``job`` in fixed-shape chunks, as an ASYNC double-buffered
@@ -777,6 +795,17 @@ class ElasticDispatcher:
             # default attempt budget with the finiteness probe armed
             policy = RetryPolicy(check_finite=injector is not None)
         guarded = injector is not None or policy.active
+        # per-stage queueing stats: enqueue → dispatch → retire → validate
+        # stamps per chunk.  Collection never touches chunk payloads or
+        # reduce order (results stay bit-identical); the mmn policy depends
+        # on the measured service decomposition, so it forces a collector.
+        collect = (self.collect_stats if collect_stats is None
+                   else collect_stats)
+        mmn = self.health_cfg.policy == "mmn"
+        collector = (DispatchStats(warmup=self.health_cfg.stats_warmup,
+                                   cooldown=self.health_cfg.stats_cooldown)
+                     if (collect or mmn) else None)
+        launch_epoch: Dict[int, int] = {}  # chunk -> epoch at its launch
         if job.deterministic and n_chunks > 1 and chunk & (chunk - 1) != 0:
             warnings.warn(
                 f"deterministic float sum chunked at {chunk} (not a power of"
@@ -798,6 +827,13 @@ class ElasticDispatcher:
         alpha = getattr(self.health_cfg, "ema_alpha", 0.4)
         stream = {"t_mark": None, "ema": None, "epoch": self._epoch}
         queue: Deque[int] = collections.deque(range(n_chunks))
+        if collector is not None:
+            # a submit stream is a CLOSED arrival process: every chunk is
+            # ready at stream start, so they share one enqueue stamp and
+            # queue_wait measures time spent behind the pipeline bound
+            t0_enq = collector.clock()
+            for _ci in range(n_chunks):
+                collector.enqueue(_ci, t0_enq)
         fired_cb: set = set()             # chunks whose on_chunk has run
         attempts: Dict[int, int] = collections.Counter()
         strikes: Dict = collections.Counter()  # retryable failures / device
@@ -829,14 +865,35 @@ class ElasticDispatcher:
                              else alpha * dt + (1.0 - alpha) * stream["ema"])
             report.ema_step_s = stream["ema"]
             if self.auto_scale and on_chunk is None:
-                self.observe_load(stream["ema"]
-                                  / self._job_target(job, stream["ema"]))
+                if mmn and collector is not None:
+                    # queue-aware feed: measured per-member service rate vs
+                    # the demand anchor 1/target.  Closed streams have no
+                    # meaningful arrival process, so queue_length stays 0 —
+                    # backlog is pipeline structure, not unmet demand (open
+                    # callers like serve/ pass a measured Lq themselves).
+                    s = collector.mean_service()
+                    if math.isfinite(s) and s > 0:
+                        target = self._job_target(job, s)
+                        self.controller.tick_queue(QueueSnapshot(
+                            arrival_rate=1.0 / target,
+                            service_rate=1.0 / (s * self.n_members),
+                            n_members=self.n_members,
+                            queue_length=0.0))
+                else:
+                    self.observe_load(stream["ema"]
+                                      / self._job_target(job, stream["ema"]))
 
         def retire_oldest():
             """Block on the oldest launched chunk, then sample; the guarded
             path validates every chunk that has left the flight queue."""
-            _, out, compiled, t_launch = self._in_flight.popleft()
+            ci, out, compiled, t_launch = self._in_flight.popleft()
             jax.block_until_ready(out)
+            if collector is not None:
+                # stamp BEFORE mark() so the mmn feed sees a fresh mean
+                tainted = compiled or launch_epoch.get(ci) != self._epoch
+                collector.retire(ci, tainted=tainted)
+                if not guarded:
+                    collector.validate(ci, tainted=tainted)
             mark(compiled, t_launch)
             if guarded:
                 sync_validation()
@@ -880,6 +937,8 @@ class ElasticDispatcher:
                 {"event": event, "t0": t0, "outstanding": set(lost)})
             for ci in reversed(lost):
                 queue.appendleft(ci)
+                if collector is not None:
+                    collector.enqueue(ci)
 
         def fail_chunk(ci: int, kind: str, member=None, detail: str = "",
                        wall=None):
@@ -916,8 +975,10 @@ class ElasticDispatcher:
             if backoff > 0:
                 time.sleep(backoff)
             queue.appendleft(ci)
+            if collector is not None:
+                collector.enqueue(ci)
 
-        def validate(ci, out, t_launch, M, L, fin=None):
+        def validate(ci, out, t_launch, M, L, fin=None, compiled=False):
             """Guarded retirement: fire any scheduled stall, take the
             chunk's wall, sync the finiteness probe (``fin``, enqueued at
             launch — falls back to a blocking ``_all_finite`` when no probe
@@ -929,6 +990,7 @@ class ElasticDispatcher:
                 time.sleep(delay)         # the hung launch: retirement late
             now = time.perf_counter()
             wall = now - t_launch
+            tainted = compiled or launch_epoch.get(ci) != self._epoch
             finite = True
             if policy.check_finite or injector is not None:
                 finite = bool(fin) if fin is not None else _all_finite(out)
@@ -939,14 +1001,22 @@ class ElasticDispatcher:
             val_step[0] += 1
             self.fault_monitor.observe_chunk(
                 step=val_step[0], wall_s=wall, finite=finite,
-                member_times=member_times)
+                member_times=member_times, tainted=tainted)
+            if collector is not None and delay > 0:
+                collector.record_stall(delay)
             if not finite:
+                if collector is not None:
+                    # a failed attempt's wall is fault noise: keep the
+                    # record's time integrals, drop it from the windows
+                    collector.validate(ci, t=now, tainted=True)
                 fail_chunk(ci, "nan_poison",
                            member=_nonfinite_member(out, L, M),
                            detail="non-finite chunk output", wall=wall)
                 return
             if (policy.chunk_timeout_s is not None
                     and wall > policy.chunk_timeout_s):
+                if collector is not None:
+                    collector.validate(ci, t=now, tainted=True)
                 fail_chunk(
                     ci, "stall", member=stall_slot,
                     detail=(f"wall {wall:.3f}s exceeded deadline "
@@ -954,14 +1024,16 @@ class ElasticDispatcher:
                             f"{self.fault_monitor.straggler_skew():.2f})"),
                     wall=wall)
                 return
+            if collector is not None:
+                collector.validate(ci, t=now, tainted=tainted)
             note_validated(ci, now)
 
         def sync_validation():
             """Validate every chunk that has left the flight queue —
             normal retirements AND remesh-barrier drains."""
             while len(pending_val) > len(self._in_flight):
-                ci, out, t_launch, M, L, fin = pending_val.popleft()
-                validate(ci, out, t_launch, M, L, fin)
+                ci, out, t_launch, M, L, fin, compiled = pending_val.popleft()
+                validate(ci, out, t_launch, M, L, fin, compiled)
 
         def launch(ci: int) -> bool:
             """Stage + compile + dispatch chunk ``ci``.  Returns False when
@@ -999,6 +1071,9 @@ class ElasticDispatcher:
                 return False
             compiled_now = self.cache.builds != builds_before
             t_launch = time.perf_counter()
+            launch_epoch[ci] = self._epoch
+            if collector is not None:
+                collector.dispatch(ci, t_launch, tainted=compiled_now)
             out = fn(sl, valid, *replicated)         # async dispatch
             # (deterministic jobs: the executable itself tree-reduced
             # the rows, so `out` is already the chunk partial)
@@ -1009,6 +1084,10 @@ class ElasticDispatcher:
                 # the chunk on host NOW — one blocking D2H per chunk,
                 # exactly the pre-async behavior this pipeline replaces
                 out = jax.tree_util.tree_map(np.asarray, out)
+                if collector is not None:
+                    collector.retire(ci, tainted=compiled_now)
+                    if not guarded:
+                        collector.validate(ci, tainted=compiled_now)
                 mark(compiled_now, t_launch)
             else:
                 self._in_flight.append((ci, out, compiled_now, t_launch))
@@ -1026,12 +1105,13 @@ class ElasticDispatcher:
                 if depth == 0:
                     # sync baseline: out is already host numpy — the cheap
                     # np fallback inside validate covers it
-                    validate(ci, out, t_launch, M, L)
+                    validate(ci, out, t_launch, M, L, compiled=compiled_now)
                 else:
                     fin = (_finite_probe(out)
                            if policy.check_finite or injector is not None
                            else None)
-                    pending_val.append((ci, out, t_launch, M, L, fin))
+                    pending_val.append(
+                        (ci, out, t_launch, M, L, fin, compiled_now))
             return True
 
         t_start = time.perf_counter()
@@ -1053,7 +1133,10 @@ class ElasticDispatcher:
                 if queue:
                     continue
                 # tail of the stream (validation failures may refill queue)
-                if guarded or (self.auto_scale and on_chunk is None):
+                # (a collector must also block-retire the tail: lazy drop
+                # would leave its last chunks' retire/validate un-stamped)
+                if (guarded or collector is not None
+                        or (self.auto_scale and on_chunk is None)):
                     # the IAS needs samples even from streams shorter than
                     # the pipeline depth, and the guarded path must block
                     # to validate: drain the tail WITH sampling (short
@@ -1096,6 +1179,8 @@ class ElasticDispatcher:
         report.cache_hits = self.cache.hits - hits0
         report.scale_events = len(self.scale_events) - events0
         report.wall_s = time.perf_counter() - t_start
+        if collector is not None:
+            report.stats = collector.summary(n_servers=1)
         return outputs, report
 
     # ---------------------------------------------------- staging + combine

@@ -167,6 +167,18 @@ class ElasticController:
             step_time=load * self.cfg.target_step_time,
             loss=0.0, grad_norm=0.0))
 
+    def tick_queue(self, snapshot) -> Decision:
+        """The queue-aware (``HealthConfig.policy="mmn"``) feed: one
+        measured ``repro.core.stats.QueueSnapshot`` — arrival rate,
+        per-member service rate, queue length — becomes the probe's load
+        via the M/M/n utilization signal ``mmn_load`` (per-member demand
+        ρ = λ/(n·μ₁), saturated-queue override).  Scale-out fires when
+        ρ ≥ max_threshold, scale-in when ρ ≤ min_threshold — exactly the
+        analytic M/M/n bottleneck call, validated in tests/test_stats.py."""
+        from repro.core.stats import mmn_load
+        return self.tick(mmn_load(snapshot, self.cfg.max_threshold,
+                                  self.cfg.mmn_queue_cap))
+
     def on_step(self, sample) -> Decision:
         self.monitor.observe(sample)
         if sample.step % self.cfg.time_between_health_checks:

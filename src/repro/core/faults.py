@@ -200,8 +200,9 @@ class FaultInjector:
                 return spec
         return None
 
-    def _log(self, kind: str, chunk: int, member) -> None:
-        self.fired.append({"kind": kind, "chunk": chunk, "member": member})
+    def _log(self, kind: str, chunk: int, member, **extra) -> None:
+        self.fired.append({"kind": kind, "chunk": chunk, "member": member,
+                           **extra})
 
     # ---------------------------------------------------------------- hooks
     def on_launch(self, chunk: int, devices: Sequence) -> None:
@@ -262,7 +263,9 @@ class FaultInjector:
         spec = self._take("stall", chunk)
         if spec is None:
             return 0.0, None
-        self._log("stall", chunk, spec.member)
+        # stall entries carry the injected latency so the fired log can be
+        # cross-checked against the collector's stall histogram
+        self._log("stall", chunk, spec.member, delay_s=spec.delay_s)
         return spec.delay_s, spec.member
 
     # ---------------------------------------------------------------- views

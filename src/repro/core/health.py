@@ -28,6 +28,15 @@ class HealthConfig:
     target_step_time: float = 1.0           # defines load = step_time/target
     ema_alpha: float = 0.4                  # async dispatch step-time EMA
     nan_is_fatal: bool = True
+    # scaling-signal policy for auto_scale dispatchers:
+    #   "ema"  (default, bit-compat) — wall-time EMA over the job target
+    #   "mmn"  — queue-aware: measured per-member service rate + demand
+    #            arrival rate + queue backlog through the M/M/n load signal
+    #            (repro.core.stats.mmn_load); forces stats collection
+    policy: str = "ema"
+    mmn_queue_cap: float = 4.0        # waiting chunks/member ≙ full load
+    stats_warmup: int = 1             # head samples trimmed from stat windows
+    stats_cooldown: int = 0           # tail samples trimmed from stat windows
 
 
 @dataclasses.dataclass
@@ -38,6 +47,10 @@ class HealthSample:
     grad_norm: float = 0.0
     loss: float = 0.0
     member_times: Optional[List[float]] = None  # per-member (straggler skew)
+    # compile/remesh-spanning samples: their wall is trace/rebuild noise, so
+    # load() and straggler_skew() exclude them (mirrors the EMA reset logic
+    # in ElasticDispatcher.submit); non-finite detection still applies
+    tainted: bool = False
 
 
 class HealthMonitor:
@@ -54,34 +67,44 @@ class HealthMonitor:
                                f"(loss={sample.loss}, gnorm={sample.grad_norm})")
 
     def observe_chunk(self, step: int, wall_s: float, finite: bool = True,
-                      member_times: Optional[List[float]] = None
-                      ) -> HealthSample:
+                      member_times: Optional[List[float]] = None,
+                      tainted: bool = False) -> HealthSample:
         """Dispatcher-side detector feed: one validated chunk becomes one
         sample.  A non-finite chunk output is recorded as ``loss=NaN`` —
         this module's documented "member crash" signal — so ``is_healthy()``
         flips and ``events`` logs the step; per-member launch walls feed
-        ``straggler_skew`` (the stall/hang signal)."""
+        ``straggler_skew`` (the stall/hang signal).  ``tainted=True`` tags
+        compile/remesh-spanning chunks: their wall (often 10-100x steady
+        state) is kept out of the load window and out of straggler-skew
+        detection — a compile chunk's skew is trace noise, not a hung
+        member — while non-finite detection still applies."""
         sample = HealthSample(step=step, step_time=wall_s,
                               loss=(0.0 if finite else float("nan")),
-                              member_times=member_times)
+                              member_times=member_times, tainted=tainted)
         self.observe(sample)
         return sample
 
     # --------------------------------------------------------------- views
     def load(self) -> float:
-        """Smoothed load in [0, inf): step_time / target (≈ process CPU load)."""
-        w = [s.step_time for s in list(self.samples)[-self.cfg.window:]]
+        """Smoothed load in [0, inf): step_time / target (≈ process CPU
+        load).  Tainted (compile/remesh) samples are excluded — they would
+        ratchet the scaler toward max_instances on trace noise."""
+        clean = [s.step_time for s in self.samples if not s.tainted]
+        w = clean[-self.cfg.window:]
         if not w:
             return 0.0
         return (sum(w) / len(w)) / self.cfg.target_step_time
 
     def straggler_skew(self) -> float:
-        """max/median member time of the newest sample (straggler signal)."""
-        if not self.samples or not self.samples[-1].member_times:
-            return 1.0
-        ts = sorted(self.samples[-1].member_times)
-        med = ts[len(ts) // 2]
-        return (ts[-1] / med) if med > 0 else 1.0
+        """max/median member time of the newest UNTAINTED sample carrying
+        per-member times (straggler signal); 1.0 when none exists."""
+        for s in reversed(self.samples):
+            if s.tainted or not s.member_times:
+                continue
+            ts = sorted(s.member_times)
+            med = ts[len(ts) // 2]
+            return (ts[-1] / med) if med > 0 else 1.0
+        return 1.0
 
     def is_healthy(self) -> bool:
         if not self.samples:

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.stats import DispatchStats
+
 
 @dataclasses.dataclass
 class Request:
@@ -30,6 +32,7 @@ class Request:
     arrived_step: int = 0
     # filled by the engine:
     slot: int = -1
+    placed_step: int = -1        # decode step the broker bound the slot
     output: Optional[List[int]] = None
     done: bool = False
 
@@ -137,6 +140,12 @@ class ServeEngine:
         self.tokens = np.zeros((n_slots, 1), np.int32)
         self._decode = jax.jit(make_decode_step(model))
         self.steps = 0
+        # OPEN-stream queueing stats in decode-STEP units (slots are the
+        # parallel servers, so service is placement-to-completion verbatim):
+        # enqueue = arrived_step, dispatch = placed_step, retire/validate =
+        # completion step.  No warm-up trim — request streams are short and
+        # every sojourn is a real, user-visible latency.
+        self.stats = DispatchStats(warmup=0, serialized=False)
 
     def _prefill_one(self, req: Request):
         """Prefill a single request into its slot (per-slot cache update)."""
@@ -154,6 +163,7 @@ class ServeEngine:
         done: List[Request] = []
         while self.steps < max_steps:
             for req in self.sched.schedule():
+                req.placed_step = self.steps
                 self._prefill_one(req)
             if not self.sched.active_slots():
                 if not self.sched.queue:
@@ -174,8 +184,15 @@ class ServeEngine:
                 s.budget -= 1
                 if s.budget <= 0:
                     s.req.done = True
+                    self.stats.record(
+                        s.req.req_id, t_enqueue=float(s.req.arrived_step),
+                        t_dispatch=float(max(s.req.placed_step,
+                                             s.req.arrived_step)),
+                        t_retire=float(self.steps))
                     done.append(s.req)
                     self.sched.release(i)
         return {"completed": done, "steps": self.steps,
                 "dropped": self.sched.dropped,
-                "utilization": self.sched.utilization()}
+                "utilization": self.sched.utilization(),
+                "stats": self.stats.summary(
+                    n_servers=len(self.sched.slots))}

@@ -555,6 +555,32 @@ def test_deterministic_float_sum_bit_identical_across_chunkings():
     np.testing.assert_array_equal(a, b)
 
 
+def test_nonpow2_warning_exactly_once_per_submit():
+    """NonPow2ChunkWarning fires EXACTLY once per offending submit — and
+    never for pow2 chunkings, single-chunk streams, or non-deterministic
+    jobs (their reduce order doesn't depend on the chunking)."""
+    import warnings as _warnings
+
+    d = ElasticDispatcher(start_members=1)
+    det = DispatchJob(name="det", signature="detw", reduce="sum",
+                      deterministic=True, member_fn=lambda x, v, *_: x)
+    x = np.ones((12, 2), np.float32)
+
+    def count(job, **kw):
+        with _warnings.catch_warnings(record=True) as rec:
+            _warnings.simplefilter("always")
+            d.submit(job, x, **kw)
+        return sum(issubclass(w.category, NonPow2ChunkWarning) for w in rec)
+
+    assert count(det, chunk=3) == 1            # non-pow2, multi-chunk
+    assert count(det, chunk=3) == 1            # once per submit, not once ever
+    assert count(det, chunk=4) == 0            # pow2
+    assert count(det, chunk=12) == 0           # single chunk: no cross-chunk
+    plain = DispatchJob(name="p", signature="pw", reduce="concat",
+                        member_fn=lambda x, v, *_: x * 2.0)
+    assert count(plain, chunk=3) == 0          # non-deterministic job
+
+
 def test_auto_scale_ema_and_target_calibration():
     """auto_scale feeds an EMA of retirement-to-retirement step times: the
     synchronous baseline still samples per chunk, compile chunks reset the

@@ -160,3 +160,127 @@ def test_des_scheduling_member_count_invariant(seed, shards):
              for i in range(shards)]
     np.testing.assert_array_equal(np.asarray(full),
                                   np.concatenate([np.asarray(p) for p in parts]))
+
+
+# ------------------------------------------- queueing stats (ISSUE 7 tentpole)
+
+@given(w=st.integers(0, 10), c=st.integers(0, 10),
+       samples=st.lists(st.floats(0.0, 1e6), max_size=40))
+@SETTINGS
+def test_stats_window_trim_is_slice(w, c, samples):
+    """Warm-up/cool-down trimming is EXACTLY the slice samples[w : n-c] —
+    over-trimmed windows are empty and every statistic degrades to NaN."""
+    import math
+    from repro.core.stats import StatsWindow
+    win = StatsWindow(warmup=w, cooldown=c)
+    win.extend(samples)
+    n = len(samples)
+    expect = samples[w:n - c] if w + c < n else []
+    np.testing.assert_array_equal(win.trimmed(), expect)
+    np.testing.assert_array_equal(win.raw(), samples)
+    if not expect:
+        assert math.isnan(win.mean()) and math.isnan(win.percentile(50))
+    else:
+        assert win.mean() == pytest.approx(np.mean(expect))
+
+
+@given(samples=st.lists(st.floats(1e-2, 1e2), min_size=1, max_size=200),
+       growth=st.floats(1.05, 2.0),
+       q=st.sampled_from([50.0, 90.0, 95.0, 99.0]))
+@SETTINGS
+def test_histogram_quantile_bounded_error(samples, growth, q):
+    """The log-bucket contract: for in-range samples the reported quantile
+    q̂ satisfies  q_true ≤ q̂ ≤ q_true · growth."""
+    from repro.core.stats import Histogram
+    h = Histogram(lo=1e-3, hi=1e3, growth=growth)
+    for v in samples:
+        h.add(v)
+    true = float(np.quantile(samples, q / 100.0, method="inverted_cdf"))
+    est = h.quantile(q)
+    assert true * (1 - 1e-9) <= est <= true * growth * (1 + 1e-9), \
+        (true, est, growth)
+
+
+@given(jobs=st.lists(st.tuples(st.floats(0.01, 2.0),    # inter-arrival gap
+                               st.floats(0.0, 3.0),     # queue wait
+                               st.floats(0.001, 3.0)),  # service time
+                     min_size=2, max_size=50))
+@SETTINGS
+def test_littles_law_exact_on_any_event_log(jobs):
+    """Little's law L = λW holds EXACTLY (not asymptotically) on any
+    consistent record stream: the horizon time-integral of the in-system
+    count equals the sojourn sum, so mean_in_system == arrival_rate × mean
+    sojourn to float precision — the conservation check the operational-law
+    view is built on.  Same identity for the waiting room (Lq = λWq)."""
+    from repro.core.stats import DispatchStats
+    stats = DispatchStats(warmup=0, serialized=False)
+    t, sojourns, waits = 0.0, [], []
+    for i, (gap, wait, service) in enumerate(jobs):
+        t += gap
+        stats.record(i, t_enqueue=t, t_dispatch=t + wait,
+                     t_retire=t + wait + service)
+        sojourns.append(wait + service)
+        waits.append(wait)
+    q = stats.queue_summary(n_servers=1)
+    lam = q["arrival_rate"]
+    assert q["mean_in_system"] == pytest.approx(
+        lam * float(np.mean(sojourns)), rel=1e-9)
+    assert q["mean_queue_length"] == pytest.approx(
+        lam * float(np.mean(waits)), rel=1e-9, abs=1e-12)
+
+
+# ------------------------- guarded vs legacy retirement equivalence (ISSUE 7)
+
+_EQ_PLAIN = None
+_EQ_GUARDED = None
+
+
+def _equivalence_dispatchers():
+    """Module-level dispatcher pair so hypothesis examples share compile
+    caches in lockstep (same submit sequence on each side)."""
+    global _EQ_PLAIN, _EQ_GUARDED
+    if _EQ_PLAIN is None:
+        from repro.core.dispatch import ElasticDispatcher
+        _EQ_PLAIN = ElasticDispatcher(start_members=1)
+        _EQ_GUARDED = ElasticDispatcher(start_members=1)
+    return _EQ_PLAIN, _EQ_GUARDED
+
+
+@given(b=st.integers(1, 24), chunk=st.integers(1, 8),
+       depth=st.integers(0, 3), seed=st.integers(0, 5))
+@SETTINGS
+def test_guarded_noop_retirement_equals_legacy_path(b, chunk, depth, seed):
+    """A no-op guard (huge deadline, no finite check, no injector) is
+    byte-for-byte the unguarded pipeline: identical output payloads,
+    identical on_chunk firing order, and identical report shape minus
+    wall-clock fields."""
+    import dataclasses as _dc
+    from repro.core.dispatch import DispatchJob
+    from repro.core.faults import RetryPolicy
+    d_plain, d_guard = _equivalence_dispatchers()
+    job = DispatchJob(name="affine", signature="affine-eq",
+                      member_fn=lambda x, v, *_: x * 3.0 - 1.0,
+                      reduce="concat")
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, 2)).astype(np.float32)
+
+    def run(d, policy):
+        fired = []
+        out, rep = d.submit(
+            job, x, chunk=chunk, dispatch_ahead=depth, deliver="host",
+            retry_policy=policy,
+            on_chunk=lambda _d, ci, n: fired.append((ci, n)))
+        return np.asarray(out), rep, fired
+
+    out_p, rep_p, fired_p = run(d_plain, None)
+    noop = RetryPolicy(chunk_timeout_s=1e9)
+    assert noop.active                      # actually exercises the guard
+    out_g, rep_g, fired_g = run(d_guard, noop)
+
+    assert out_p.tobytes() == out_g.tobytes()
+    assert fired_p == fired_g               # same callback order
+    sp, sg = _dc.asdict(rep_p), _dc.asdict(rep_g)
+    for volatile in ("wall_s", "ema_step_s", "stats"):
+        sp.pop(volatile), sg.pop(volatile)
+    assert sp == sg                         # reports agree field by field
+    assert rep_g.failures == [] and rep_g.retries == 0

@@ -68,3 +68,14 @@ def test_engine_completes_requests(policy):
     for r in out["completed"]:
         assert len(r.output) == 3
         assert all(0 <= t < cfg.padded_vocab for t in r.output)
+    # open-stream queueing stats in decode-step units: every completion is
+    # recorded, service = placement->completion (3 new tokens + prefill
+    # steps), and the queue wait counts steps spent waiting for a slot
+    s = out["stats"]
+    assert s["n_records"] == 4
+    assert s["queue"]["n_completed"] == 4
+    assert s["service"]["mean"] >= 3            # at least the decode budget
+    assert s["queue_wait"]["mean"] >= 0
+    # 4 requests into 2 slots: the second pair waited for a free slot
+    assert s["sojourn"]["p99"] >= s["service"]["p50"]
+    assert 0 < s["queue"]["utilization"] <= 1.0

@@ -1,0 +1,422 @@
+"""Queueing-theoretic observability — the tier-1 validation suite.
+
+Acceptance contract of the stats layer (ISSUE 7):
+
+  * synthetic job streams of KNOWN service-time distribution, fed through
+    ``DispatchStats``, reproduce the analytic M/M/n utilization and mean
+    queue length (Erlang C / operational laws) within tolerance;
+  * the queue-aware scaler (``HealthConfig.policy="mmn"``) makes the same
+    call as the analytic bottleneck analysis for n ∈ {1, 2, 4, 8};
+  * instrumentation NEVER changes results: streamed outputs are
+    bit-identical with stats enabled.
+"""
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.health import HealthConfig, HealthMonitor
+from repro.core.stats import (DispatchStats, Histogram, HistogramSet,
+                              QueueSnapshot, StatsWindow, erlang_c, mmn_load,
+                              mmn_metrics, mmn_required_members)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ------------------------------------------------------------- StatsWindow
+
+def test_stats_window_int_trimming():
+    w = StatsWindow(warmup=2, cooldown=1)
+    w.extend([100.0, 50.0, 1.0, 2.0, 3.0, 999.0])
+    np.testing.assert_array_equal(w.trimmed(), [1.0, 2.0, 3.0])
+    assert w.mean() == 2.0
+    assert w.percentile(50) == 2.0
+    s = w.summary()
+    assert s["n"] == 3.0 and s["mean"] == 2.0
+    assert len(w) == 6 and w.raw().size == 6
+
+
+def test_stats_window_fraction_trimming():
+    w = StatsWindow(warmup=0.25, cooldown=0.25)     # quarter off each end
+    w.extend(range(8))
+    np.testing.assert_array_equal(w.trimmed(), [2.0, 3.0, 4.0, 5.0])
+
+
+def test_stats_window_overtrimmed_is_nan():
+    w = StatsWindow(warmup=3, cooldown=3)
+    w.extend([1.0, 2.0])
+    assert w.trimmed().size == 0
+    assert math.isnan(w.mean()) and math.isnan(w.percentile(99))
+    assert w.summary()["n"] == 0.0
+    with pytest.raises(ValueError):
+        StatsWindow(warmup=-1)
+
+
+# --------------------------------------------------------------- Histogram
+
+def test_histogram_quantile_bounded_relative_error():
+    h = Histogram(lo=1e-3, hi=1e3, growth=1.5)
+    rng = np.random.default_rng(0)
+    samples = rng.uniform(0.01, 100.0, size=500)
+    for v in samples:
+        h.add(v)
+    for q in (50, 95, 99):
+        true = np.quantile(samples, q / 100.0, method="inverted_cdf")
+        est = h.quantile(q)
+        assert true <= est <= true * h.growth + 1e-12, (q, true, est)
+
+
+def test_histogram_under_overflow_and_extrema_clamp():
+    h = Histogram(lo=1.0, hi=10.0, growth=2.0)
+    h.add(0.5)                      # underflow
+    h.add(100.0)                    # overflow
+    assert h.counts[0] == 1 and h.counts[-1] == 1
+    assert h.quantile(1) == 1.0     # underflow reports lo
+    assert h.quantile(99) == 100.0  # overflow clamps to observed max
+    assert h.mean() == pytest.approx(50.25)
+
+
+def test_histogram_rejects_bad_samples_and_merges():
+    h = Histogram()
+    with pytest.raises(ValueError):
+        h.add(float("nan"))
+    with pytest.raises(ValueError):
+        h.add(-1.0)
+    with pytest.raises(ValueError):
+        Histogram(lo=0.0)
+    a, b = Histogram(lo=1e-3, hi=1e3), Histogram(lo=1e-3, hi=1e3)
+    for v in (0.1, 1.0):
+        a.add(v)
+    b.add(10.0)
+    a.merge(b)
+    assert a.count == 3 and a.max == 10.0 and a.min == 0.1
+    with pytest.raises(ValueError):
+        a.merge(Histogram(lo=1e-2, hi=1e3))
+
+
+def test_histogram_set_shared_layout():
+    hs = HistogramSet(lo=1e-3, hi=1e3)
+    hs.record("service", 0.5)
+    hs.record("service", 1.5)
+    hs.record("queue_wait", 0.25)
+    assert "service" in hs and "missing" not in hs
+    qs = hs.quantiles((50,))
+    assert set(qs) == {"service", "queue_wait"}
+    assert hs["service"].count == 2
+    assert hs.summary()["queue_wait"]["n"] == 1.0
+
+
+# ---------------------------------------------------------- M/M/n analytics
+
+def test_erlang_c_matches_mm1_closed_form():
+    # M/M/1: P(wait) = rho exactly
+    for rho in (0.1, 0.5, 0.9):
+        assert erlang_c(1, rho) == pytest.approx(rho, rel=1e-12)
+    # unstable and empty edges
+    assert erlang_c(4, 4.0) == 1.0 and erlang_c(4, 0.0) == 0.0
+    with pytest.raises(ValueError):
+        erlang_c(0, 1.0)
+    # adding servers at fixed offered load strictly reduces waiting
+    waits = [erlang_c(n, 1.8) for n in (2, 3, 4, 8)]
+    assert all(a > b for a, b in zip(waits, waits[1:]))
+
+
+def test_mmn_metrics_closed_forms():
+    # M/M/1: Lq = rho^2/(1-rho), W = 1/(mu-lam)
+    m = mmn_metrics(lam=0.5, mu=1.0, n=1)
+    assert m["rho"] == pytest.approx(0.5)
+    assert m["lq"] == pytest.approx(0.25 / 0.5)
+    assert m["w"] == pytest.approx(1.0 / (1.0 - 0.5))
+    # Little's law internal consistency: L = lam * W
+    for lam, mu, n in [(0.9, 0.5, 4), (3.0, 1.0, 8), (1.5, 1.0, 2)]:
+        m = mmn_metrics(lam, mu, n)
+        assert m["l"] == pytest.approx(lam * m["w"], rel=1e-12)
+        assert m["lq"] == pytest.approx(lam * m["wq"], rel=1e-12)
+    # instability
+    m = mmn_metrics(lam=2.0, mu=1.0, n=2)
+    assert m["rho"] == 1.0 and math.isinf(m["lq"])
+    with pytest.raises(ValueError):
+        mmn_metrics(1.0, 0.0, 1)
+
+
+def test_mmn_required_members_is_analytic_bottleneck():
+    assert mmn_required_members(lam=3.0, mu=1.0, rho_target=0.8) == 4
+    assert mmn_required_members(lam=0.1, mu=1.0, rho_target=0.8) == 1
+    assert mmn_required_members(lam=100.0, mu=1.0, rho_target=0.8,
+                                max_members=8) == 8
+    with pytest.raises(ValueError):
+        mmn_required_members(1.0, 1.0, 0.0)
+
+
+# ------------------------------- synthetic M/M/n stream vs operational laws
+
+def _simulate_mmn(lam: float, mu: float, n: int, n_jobs: int, seed: int):
+    """Event-driven FIFO M/M/n: Poisson arrivals (rate ``lam``), exp(mu)
+    services, ``n`` parallel servers.  Returns (t_arrive, t_start, t_end)
+    per job — the ground-truth event log the stats layer must reproduce."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n_jobs))
+    services = rng.exponential(1.0 / mu, size=n_jobs)
+    free_at = np.zeros(n)                     # next-free time per server
+    out = []
+    for t_arr, s in zip(arrivals, services):
+        k = int(np.argmin(free_at))           # FIFO: earliest-free server
+        t_start = max(t_arr, free_at[k])
+        free_at[k] = t_start + s
+        out.append((t_arr, t_start, t_start + s))
+    return out
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8])
+def test_measured_stats_match_mmn_analytics(n):
+    """THE headline validation: a synthetic stream of known distribution,
+    stamped through ``DispatchStats``, reproduces the Erlang-C utilization
+    and mean queue length within sampling tolerance — and Little's law
+    holds EXACTLY on the recorded event log."""
+    mu, rho = 1.0, 0.7
+    lam = rho * n * mu
+    events = _simulate_mmn(lam, mu, n, n_jobs=4000, seed=n)
+    st = DispatchStats(warmup=0, serialized=False)
+    for i, (t_arr, t_start, t_end) in enumerate(events):
+        st.record(i, t_enqueue=t_arr, t_dispatch=t_start, t_retire=t_end)
+
+    q = st.queue_summary(n_servers=n)
+    ana = mmn_metrics(lam, mu, n)
+    assert q["n_completed"] == 4000
+    # utilization law U = X·S/n vs analytic rho (finite-sample tolerance)
+    assert q["utilization"] == pytest.approx(ana["rho"], rel=0.06)
+    assert q["arrival_rate"] == pytest.approx(lam, rel=0.06)
+    # time-averaged queue length vs Erlang-C Lq (Lq has high variance at
+    # rho=0.7 — accept a generous but still discriminating band)
+    assert q["mean_queue_length"] == pytest.approx(ana["lq"], rel=0.35), \
+        (n, q["mean_queue_length"], ana["lq"])
+    # Little's law L = λW is an IDENTITY on the event log: the horizon
+    # integral equals the sojourn sum by construction
+    t0, t1 = st.horizon()
+    mean_sojourn = float(np.mean([e - a for a, _, e in events]))
+    assert q["mean_in_system"] == pytest.approx(
+        q["arrival_rate"] * mean_sojourn, rel=1e-9)
+    # the per-interval windows decompose the sojourn: wait + service
+    mean_wait = st.windows["queue_wait"].mean()
+    mean_service = st.windows["service"].mean()
+    assert mean_wait + mean_service == pytest.approx(mean_sojourn, rel=1e-9)
+    assert mean_service == pytest.approx(1.0 / mu, rel=0.06)
+    assert mean_wait == pytest.approx(ana["wq"], rel=0.35)
+
+
+# ------------------------------------------------- queue-aware scaler calls
+
+def _controller(n, max_instances=16):
+    from repro.core.elastic import ElasticController
+    hc = HealthConfig(window=1, time_between_scaling=1,
+                      max_instances=max_instances)
+    return ElasticController(hc, n)
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8])
+def test_tick_queue_matches_analytic_bottleneck(n):
+    """The scaler's decision agrees with the Erlang bottleneck analysis:
+    scale OUT exactly when the analytic requirement exceeds n, scale IN
+    when demand would be satisfied at min load by far fewer members."""
+    from repro.core.elastic import Decision
+    mu1 = 1.0
+    # demand needing ~2n members at rho_target=0.8 -> analytic says grow
+    lam_hot = 0.8 * (2 * n) * mu1
+    assert mmn_required_members(lam_hot, mu1, 0.8) > n
+    c = _controller(n)
+    snap = QueueSnapshot(arrival_rate=lam_hot, service_rate=mu1, n_members=n)
+    assert snap.rho >= 0.8
+    assert c.tick_queue(snap) == Decision.SCALE_OUT
+    assert c.n_instances == min(2 * n, 16)
+
+    # demand satisfiable by far fewer members -> analytic says shrink
+    lam_cold = 0.1 * n * mu1
+    assert mmn_required_members(lam_cold, mu1, 0.8) <= max(n // 2, 1)
+    c2 = _controller(n)
+    snap2 = QueueSnapshot(arrival_rate=lam_cold, service_rate=mu1,
+                          n_members=n)
+    assert snap2.rho <= 0.2
+    expect = Decision.SCALE_IN if n > 1 else Decision.NONE
+    assert c2.tick_queue(snap2) == expect
+
+    # balanced demand -> hold
+    lam_ok = 0.5 * n * mu1
+    c3 = _controller(n)
+    assert c3.tick_queue(QueueSnapshot(
+        arrival_rate=lam_ok, service_rate=mu1,
+        n_members=n)) == Decision.NONE
+
+
+def test_tick_queue_converges_to_analytic_member_count():
+    """Iterating measure→decide from 1 member under fixed demand converges
+    to a stable count that COVERS the analytic bottleneck requirement."""
+    from repro.core.elastic import Decision
+    mu1, lam = 1.0, 5.0                    # needs ceil(5/0.8) = 7 members
+    need = mmn_required_members(lam, mu1, 0.8)
+    c = _controller(1)
+    for _ in range(10):
+        d = c.tick_queue(QueueSnapshot(arrival_rate=lam, service_rate=mu1,
+                                       n_members=c.n_instances))
+        if d == Decision.NONE:
+            break
+    n_final = c.n_instances
+    assert n_final >= need                       # demand is covered
+    # and it is STABLE: neither threshold fires at the converged count
+    assert c.tick_queue(QueueSnapshot(
+        arrival_rate=lam, service_rate=mu1,
+        n_members=n_final)) == Decision.NONE
+
+
+def test_mmn_load_queue_pressure_override():
+    """A saturated measured backlog forces the load signal to the scale-out
+    threshold even when per-chunk service alone looks fine."""
+    calm = QueueSnapshot(arrival_rate=1.0, service_rate=1.0, n_members=2,
+                         queue_length=0.0)
+    assert mmn_load(calm) == pytest.approx(0.5)
+    backed_up = QueueSnapshot(arrival_rate=1.0, service_rate=1.0,
+                              n_members=2, queue_length=20.0)
+    assert mmn_load(backed_up, max_threshold=0.8, queue_cap=4.0) >= 0.8
+    # pressure is capped: never more than 2x the threshold
+    flood = QueueSnapshot(arrival_rate=1.0, service_rate=1.0, n_members=2,
+                          queue_length=1e9)
+    assert mmn_load(flood, max_threshold=0.8) == pytest.approx(1.6)
+
+
+# ------------------------------------- HealthMonitor taint regression (sat 1)
+
+def test_straggler_skew_excludes_tainted_samples():
+    """Regression: a compile/remesh-spanning chunk's member walls must not
+    trip straggler-skew detection — its skew is trace noise, and before the
+    taint tag it polluted both the load window and the skew signal."""
+    hm = HealthMonitor(HealthConfig(target_step_time=1.0, window=4))
+    for i in range(4):
+        hm.observe_chunk(step=i, wall_s=1.0, member_times=[1.0, 1.0, 1.0])
+    assert hm.load() == pytest.approx(1.0)
+    assert hm.straggler_skew() == pytest.approx(1.0)
+    # a tainted sample with a 50x straggler and a 100x wall
+    hm.observe_chunk(step=4, wall_s=100.0, member_times=[1.0, 1.0, 50.0],
+                     tainted=True)
+    assert hm.straggler_skew() == pytest.approx(1.0)   # newest CLEAN sample
+    assert hm.load() == pytest.approx(1.0)             # window stays clean
+    # a clean straggler IS still detected afterwards
+    hm.observe_chunk(step=5, wall_s=1.0, member_times=[1.0, 1.0, 3.0])
+    assert hm.straggler_skew() == pytest.approx(3.0)
+    # tainted non-finite still flips health (crash detection never filtered)
+    hm.observe_chunk(step=6, wall_s=1.0, finite=False, tainted=True)
+    assert not hm.is_healthy()
+
+
+# --------------------------------------------- dispatcher stats integration
+
+def _double_job():
+    from repro.core.dispatch import DispatchJob
+    return DispatchJob(name="dbl", signature="dbl",
+                      member_fn=lambda x, v, *_: x * 2.0, reduce="concat")
+
+
+def test_dispatch_report_stats_structure():
+    """collect_stats=True: every chunk is stamped at all four stages, the
+    compile chunk is tainted, and the summary carries the queueing view."""
+    from repro.core.dispatch import ElasticDispatcher
+    d = ElasticDispatcher(start_members=1, collect_stats=True)
+    x = np.arange(64, dtype=np.float32)
+    out, rep = d.submit(_double_job(), x, chunk=8)
+    np.testing.assert_allclose(np.asarray(out), x * 2.0)
+    s = rep.stats
+    assert s is not None
+    assert s["n_records"] == rep.n_chunks == 8
+    assert s["n_tainted"] >= 1                  # the compile chunk
+    q = s["queue"]
+    assert q["n_completed"] == 8 and q["horizon_s"] > 0
+    assert 0 < q["utilization"] <= 1.0
+    assert q["throughput"] > 0
+    for name in ("queue_wait", "service", "validate", "sojourn"):
+        assert {"n", "mean", "p50", "p95", "p99"} <= set(s[name])
+    # windows exclude tainted + warmup records
+    assert s["service"]["n"] <= s["n_records"] - s["n_tainted"]
+    # a fresh summary survives JSON round-tripping (report consumers)
+    import json
+    json.dumps(s)
+
+
+def test_dispatch_stats_off_by_default_and_per_submit_override():
+    from repro.core.dispatch import ElasticDispatcher
+    d = ElasticDispatcher(start_members=1)
+    x = np.arange(16, dtype=np.float32)
+    _, rep = d.submit(_double_job(), x, chunk=8)
+    assert rep.stats is None
+    _, rep_on = d.submit(_double_job(), x, chunk=8, collect_stats=True)
+    assert rep_on.stats is not None
+    # dispatcher-level default with per-submit opt-out
+    d2 = ElasticDispatcher(start_members=1, collect_stats=True)
+    _, r1 = d2.submit(_double_job(), x, chunk=8)
+    assert r1.stats is not None
+    _, r2 = d2.submit(_double_job(), x, chunk=8, collect_stats=False)
+    assert r2.stats is None
+
+
+def test_stats_instrumentation_bit_identical():
+    """Instrumentation is pure host-side timestamping: streamed outputs are
+    byte-identical with stats enabled, for concat AND deterministic sum."""
+    import jax.numpy as jnp
+    from repro.core.dispatch import DispatchJob, ElasticDispatcher
+    x = np.linspace(0.1, 7.3, 64).astype(np.float32)
+    det = DispatchJob(name="dsum", signature="dsum", reduce="sum",
+                      deterministic=True,
+                      member_fn=lambda v_, valid, *_: v_ * 1.7)
+    for job in (_double_job(), det):
+        d_off = ElasticDispatcher(start_members=1)
+        d_on = ElasticDispatcher(start_members=1, collect_stats=True)
+        out_off, _ = d_off.submit(job, x, chunk=8, deliver="host")
+        out_on, rep_on = d_on.submit(job, x, chunk=8, deliver="host")
+        assert np.asarray(out_off).tobytes() == np.asarray(out_on).tobytes()
+        assert rep_on.stats is not None
+
+
+def test_bad_policy_rejected():
+    from repro.core.dispatch import ElasticDispatcher
+    with pytest.raises(ValueError, match="policy"):
+        ElasticDispatcher(health_cfg=HealthConfig(policy="bogus"))
+
+
+def test_mmn_policy_scales_like_analytic_bottleneck():
+    """End-to-end (8 fake devices): policy="mmn" under impossible demand
+    scales 1→8, under trivial demand scales 4→1, and both runs' outputs
+    stay bit-identical to the policy="ema" dispatcher's."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", """
+import numpy as np
+from repro.core.dispatch import ElasticDispatcher, DispatchJob
+from repro.core.health import HealthConfig
+
+job = DispatchJob(name="dbl", signature="dbl",
+                  member_fn=lambda x, v, *_: x * 2.0, reduce="concat")
+x = np.arange(512, dtype=np.float32)
+ref_d = ElasticDispatcher(start_members=1)
+ref, _ = ref_d.submit(job, x, chunk=8, deliver="host")
+
+# demand anchored at an impossible target -> rho >> 1 -> grow to the cap
+hc = HealthConfig(policy="mmn", time_between_scaling=2, max_instances=8)
+d = ElasticDispatcher(start_members=1, health_cfg=hc, auto_scale=True)
+d.calibrate_target(job, 1e-7)
+out, rep = d.submit(job, x, chunk=8, deliver="host")
+assert d.n_members == 8, d.n_members
+assert rep.scale_events == 3, rep.scale_events          # 1->2->4->8
+assert rep.stats is not None                             # mmn forces stats
+assert np.asarray(out).tobytes() == np.asarray(ref).tobytes()
+
+# trivially satisfiable demand -> rho ~ 0 -> shrink to min_instances
+hc2 = HealthConfig(policy="mmn", time_between_scaling=2, max_instances=8)
+d2 = ElasticDispatcher(start_members=4, health_cfg=hc2, auto_scale=True)
+d2.calibrate_target(job, 1e3)
+out2, rep2 = d2.submit(job, x, chunk=8, deliver="host")
+assert d2.n_members == 1, d2.n_members
+assert np.asarray(out2).tobytes() == np.asarray(ref).tobytes()
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=900)
+    assert "OK" in r.stdout, r.stdout + r.stderr
