@@ -1,0 +1,185 @@
+"""Durable dispatch — checkpoint overhead + resume-vs-rerun latency.
+
+Two measurements on a deterministic-sum chunk stream (the float reduction
+whose pow2-aligned binary-counter state is what the journal checkpoints),
+written to ``BENCH_resume.json``:
+
+* ``overhead``: the fault-free async stream with NO journal vs a journaled
+  stream at ``every_n_chunks`` ∈ {1, 4, 16}, measured PAIRED — all modes
+  alternate rep by rep in ABBA order so each samples the same box state,
+  each keeps its best.  The per-chunk gather + digest + checkpoint fold all
+  ride the journal writer thread (``JobJournal.defer``), so the dispatch
+  thread pays one queue put per chunk; the workload computes like a real
+  DES-scan stream so that CPU ratio is the one that matters.  All walls
+  are ``scan_s`` entries (labelled by ``core``), so
+  ``run.py --check`` gates them like every other benchmark; the PR
+  acceptance pins the ``every_n_chunks=4`` overhead at ≤ 5%.
+* ``resume``: a journaled stream killed at ¾ of its chunks, then the
+  measured ``ElasticDispatcher.resume`` wall vs rerunning the whole stream
+  from scratch — the durability payoff.  Latency entries are informational
+  (they depend on the kill point), not regression-gated; bit-identity of
+  the resumed bytes IS asserted.
+"""
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):   # standalone: python benchmarks/checkpoint_resume.py
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    _root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, smoke
+from repro.core.dispatch import DispatchJob, ElasticDispatcher
+from repro.core.faults import CoordinatorCrashError, FaultInjector, FaultSpec
+from repro.core.journal import CheckpointPolicy
+
+BENCH_JSON = "BENCH_resume.json"
+
+
+def _job():
+    # an iterated map (128 sqrt steps/row, ~1.5µs/item) calibrated to the
+    # per-item compute of the repo's real DES-scan streams (BENCH_core.json:
+    # ~1.1µs/cloudlet, BENCH_dist.json: ~1.9µs) — checkpoint overhead is
+    # only meaningful relative to a workload that computes, and on a
+    # single-core box the journal's gather+digest CPU can't hide behind a
+    # memcpy-speed member fn
+    def member_fn(x, v, w):
+        def step(_, y):
+            return y * np.float32(0.995) + jnp.sqrt(jnp.abs(y) + w)
+        return jax.lax.fori_loop(0, 128, step, x)
+
+    return DispatchJob(name="det", signature="bench-resume", reduce="sum",
+                       deterministic=True, member_fn=member_fn)
+
+
+def _items(C):
+    rng = np.random.RandomState(0)
+    return (rng.randn(C, 8) * 10 ** rng.uniform(-2, 2, (C, 8))).astype(
+        np.float32)
+
+
+def _dispatcher(members):
+    return ElasticDispatcher(devices=jax.devices()[:members],
+                             start_members=members, dispatch_ahead=2)
+
+
+def bench_overhead(C, chunk, members, reps, workdir):
+    """No-journal vs every_n_chunks ∈ {1,4,16}, paired ABBA best-of."""
+    job, items, w = _job(), _items(C), np.float32(1.7)
+    modes = {"ckpt_none": None, "ckpt_every1": 1, "ckpt_every4": 4,
+             "ckpt_every16": 16}
+    disp = {m: _dispatcher(members) for m in modes}
+
+    def run(m):
+        every = modes[m]
+        pol = (None if every is None else
+               CheckpointPolicy(path=os.path.join(workdir, m),
+                                every_n_chunks=every))
+        t0 = time.perf_counter()
+        out, _ = disp[m].submit(job, items, replicated=(w,), chunk=chunk,
+                                deliver="host", checkpoint=pol)
+        return time.perf_counter() - t0, np.asarray(out)
+
+    best, ref = {}, None
+    for m in disp:                         # compile everything first
+        _, out = run(m)
+        if ref is None:
+            ref = out
+        assert out.tobytes() == ref.tobytes(), m   # journaling never
+        # changes the bytes
+    for rep in range(reps):
+        order = list(disp) if rep % 2 == 0 else list(disp)[::-1]
+        for m in order:
+            wall, _ = run(m)
+            if m not in best or wall < best[m]:
+                best[m] = wall
+    entries = [{"core": m, "n_scenarios": C, "n_members": members,
+                "chunk": chunk, "every_n_chunks": modes[m],
+                "scan_s": best[m]} for m in disp]
+    overheads = {m: best[m] / best["ckpt_none"] - 1.0
+                 for m in disp if m != "ckpt_none"}
+    for e in entries:
+        emit(f"ckpt/{e['core']}/C{C}", e["scan_s"] * 1e6,
+             f"{C / e['scan_s']:.0f} items/s")
+    for m, ov in overheads.items():
+        emit(f"ckpt/overhead/{m}", ov * 1e6, f"{ov * 100:+.2f}%")
+    return {"entries": entries,
+            "overhead_pct": {m: ov * 100.0 for m, ov in overheads.items()}}
+
+
+def bench_resume(C, chunk, members, workdir):
+    """Kill a journaled stream at ¾ of its chunks; resume wall vs rerun
+    wall.  The resumed bytes must equal the uninterrupted run's."""
+    job, items, w = _job(), _items(C), np.float32(1.7)
+    n_chunks = -(-C // chunk)
+    kill_at = max(1, (3 * n_chunks) // 4)
+    ck = os.path.join(workdir, "resume")
+
+    # rerun baseline: a FRESH dispatcher paying its own compile, exactly
+    # like the post-crash choice really looks (the dead coordinator's cache
+    # died with it) — resume below starts equally cold
+    d0 = _dispatcher(members)
+    t0 = time.perf_counter()
+    out_ref, _ = d0.submit(job, items, replicated=(w,), chunk=chunk,
+                           deliver="host")
+    rerun_s = time.perf_counter() - t0
+
+    d1 = _dispatcher(members)
+    try:
+        d1.submit(job, items, replicated=(w,), chunk=chunk, deliver="host",
+                  checkpoint=CheckpointPolicy(path=ck, every_n_chunks=4),
+                  fault_injector=FaultInjector(
+                      [FaultSpec("coordinator_crash", chunk=kill_at)]))
+        raise RuntimeError("coordinator_crash did not fire")
+    except CoordinatorCrashError:
+        pass
+
+    d2 = _dispatcher(members)
+    t0 = time.perf_counter()
+    out, rep = d2.resume(ck, job, items, replicated=(w,), chunk=chunk)
+    resume_s = time.perf_counter() - t0
+    assert np.asarray(out).tobytes() == np.asarray(out_ref).tobytes()
+
+    entry = {"n_scenarios": C, "n_members": members, "chunk": chunk,
+             "n_chunks": n_chunks, "kill_at": kill_at,
+             "chunks_skipped": rep.chunks_skipped,
+             "chunks_replayed": rep.chunks_replayed,
+             "resume_s": resume_s, "rerun_s": rerun_s,
+             "speedup": rerun_s / max(resume_s, 1e-9)}
+    emit(f"ckpt/resume/C{C}", resume_s * 1e6,
+         f"vs rerun {rerun_s * 1e6:.0f}us "
+         f"(skipped {rep.chunks_skipped}/{n_chunks})")
+    return entry
+
+
+def main():
+    if smoke():
+        C, chunk, reps = 2_048, 256, 2
+    else:
+        C, chunk, reps = 200_000, 8_192, 6
+    members = len(jax.devices())
+    workdir = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        overhead = bench_overhead(C, chunk, members, reps, workdir)
+        resume = bench_resume(C, chunk, members, workdir)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    return {"n_devices": members, "overhead": overhead, "resume": resume}
+
+
+if __name__ == "__main__":
+    _path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         BENCH_JSON)
+    with open(_path, "w") as f:
+        json.dump(main(), f, indent=2)
+    print(f"wrote {_path}")

@@ -106,8 +106,8 @@ def _check_payload(mod, payload, path):
 
 
 def main() -> None:
-    from benchmarks import (batch_grid, core_scaling, dist_scaling,
-                            fault_recovery, fig_5_1_scaling,
+    from benchmarks import (batch_grid, checkpoint_resume, core_scaling,
+                            dist_scaling, fault_recovery, fig_5_1_scaling,
                             fig_5_4_matchmaking, fig_5_9_mapreduce,
                             queue_stats, serve_brokers, speedup_model,
                             table_5_1, table_5_2_elastic)
@@ -115,7 +115,7 @@ def main() -> None:
     mods = (table_5_1, core_scaling, batch_grid, dist_scaling,
             fig_5_1_scaling, fig_5_4_matchmaking, fig_5_9_mapreduce,
             table_5_2_elastic, speedup_model, serve_brokers, fault_recovery,
-            queue_stats)
+            queue_stats, checkpoint_resume)
     if check:
         # only modules whose COMMITTED artifact holds scan_s entries can be
         # compared — skip the rest (e.g. batch_grid's throughput-only JSON)

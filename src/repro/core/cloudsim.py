@@ -457,3 +457,35 @@ class ElasticSimulationCluster:
             r, vm_assign=r.vm_assign[:C], finish_times=r.finish_times[:C],
             workload_checksum=(None if r.workload_checksum is None
                                else r.workload_checksum[:C]))
+
+    def simulate_grid(self, cfg: SimulationConfig, grid, *,
+                      chunk: Optional[int] = None, on_chunk=None,
+                      dispatch_ahead: Optional[int] = None,
+                      checkpoint=None):
+        """Stream a ``make_scenario_grid`` product through this cluster's
+        elastic dispatcher — the cloudsim face of the scenario-grid batch
+        path (``des_scan.run_scenario_grid``), with mid-stream IAS scale
+        events and, via ``checkpoint`` (a ``core.journal.CheckpointPolicy``),
+        DURABLE dispatch: the campaign's chunk stream is journaled and
+        checkpointed so a killed coordinator resumes bit-identically
+        (``resume_grid``).  Returns a ``BatchSimulationResult`` whose
+        ``dispatch`` field carries the ``DispatchReport`` summary."""
+        from repro.core.des_scan import run_scenario_grid
+        return run_scenario_grid(cfg, grid, dispatcher=self.dispatcher,
+                                 chunk=chunk, on_chunk=on_chunk,
+                                 dispatch_ahead=dispatch_ahead,
+                                 checkpoint=checkpoint)
+
+    def resume_grid(self, path: str, cfg: SimulationConfig, grid, *,
+                    chunk: Optional[int] = None, on_chunk=None):
+        """Continue a journaled ``simulate_grid`` after a coordinator
+        crash/drain: rebuild the scenario job + operand stack exactly as
+        ``simulate_grid`` would (the journal's environment signature is
+        verified against it), then hand off to
+        ``ElasticDispatcher.resume``.  Returns the same tuple-of-arrays
+        payload the scenario job produces, bit-identical to an
+        uninterrupted ``simulate_grid``."""
+        from repro.core.des_scan import grid_batch_args
+        args, job, _ = grid_batch_args(cfg, grid)
+        return self.dispatcher.resume(path, job, args, chunk=chunk,
+                                      on_chunk=on_chunk)

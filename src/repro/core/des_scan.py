@@ -649,44 +649,15 @@ def _axis_array(value, B, dtype, name, id_map=None):
     return arr
 
 
-def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
-                         n_vms=None, n_cloudlets=None, mips_dist=None,
-                         n_datacenters=None, is_loaded=None,
-                         executor=None, dispatcher=None, chunk=None,
-                         on_chunk=None,
-                         dispatch_ahead=None) -> BatchSimulationResult:
-    """Execute a multi-axis scenario GRID in a SINGLE jitted vmap.
-
-    seeds: (B,) int array — one PRNG stream per scenario.  The optional grid
-    axes are each a (B,) per-variant array (or a scalar applied to all):
-
-      mi_scale      — float multiplier on cloudlet lengths (workload sweep)
-      broker        — "round_robin" | "matchmaking" (names or BROKER_IDS ints)
-      n_vms         — live VM count ≤ cfg.n_vms; the rest are 0-MIPS padding
-      n_cloudlets   — live cloudlet count ≤ cfg.n_cloudlets; rest valid=False
-      mips_dist     — "uniform" | "fixed" | "bimodal" (or MIPS_DIST_IDS ints)
-      n_datacenters — datacenter-topology axis: VMs round-robin over that
-                      many datacenters with seed-deterministic capacity
-                      factors; 0 = flat topology (bit-exact no-op)
-      is_loaded     — 0/1: attach the real ``isLoaded`` workload payload and
-                      report its per-variant checksum (finish times are
-                      untouched; padded rows keep finish exactly 0)
-
-    The closed-form core has no data-dependent loop and every axis is a
-    traced scalar, so B heterogeneous variants cost one XLA dispatch; ≥96
-    variants per jit is the intended operating point.  With ``executor``
-    (a multi-member mesh) the grid is sharded B/n-per-member: the scenario
-    vmap runs inside the partitioned member_fn.  With ``dispatcher`` (an
-    ``ElasticDispatcher``) the grid is submitted as a STREAMING job: cut
-    into ``chunk``-variant chunks (grids larger than device memory), one
-    compile per (geometry, job-signature), surviving IAS scale events
-    between chunks (``on_chunk`` can feed ``observe_load``); the stream is
-    ASYNC double-buffered — ``dispatch_ahead`` overrides the dispatcher's
-    pipeline depth (0 = synchronous baseline), and the grid axes (jnp
-    arrays) are chunked on DEVICE, never round-tripping to host.  ``cfg.
-    use_kernel`` is honored; only the vmappable ``core="scan"`` is
-    supported (the wave loop doesn't batch).
-    """
+def _batch_axis_args(cfg, seeds, *, mi_scale=None, broker=None, n_vms=None,
+                     n_cloudlets=None, mips_dist=None, n_datacenters=None,
+                     is_loaded=None):
+    """Normalize the grid axes of a scenario batch into the positional
+    operand stack ``_grid_scenario`` consumes: ``(seeds, scale, broker,
+    n_vms, n_cloudlets, mips_dist, n_datacenters, is_loaded)``, each a (B,)
+    array, plus the STATIC workload gate.  Shared by ``run_simulation_batch``
+    and the resume path (``grid_batch_args``) so a restarted coordinator
+    rebuilds bit-identical operands from the same cfg + grid."""
     if cfg.core != "scan":
         raise ValueError(
             f"run_simulation_batch only supports core='scan', got {cfg.core!r}")
@@ -726,6 +697,53 @@ def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
                                     MIPS_DIST_IDS),
                         MIPS_DIST_IDS["uniform"], jnp.int32)
     args = (seeds, scale, broker, n_vms, n_cl, mips_dist, n_dc, loaded)
+    return args, with_workload
+
+
+def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
+                         n_vms=None, n_cloudlets=None, mips_dist=None,
+                         n_datacenters=None, is_loaded=None,
+                         executor=None, dispatcher=None, chunk=None,
+                         on_chunk=None, dispatch_ahead=None,
+                         checkpoint=None) -> BatchSimulationResult:
+    """Execute a multi-axis scenario GRID in a SINGLE jitted vmap.
+
+    seeds: (B,) int array — one PRNG stream per scenario.  The optional grid
+    axes are each a (B,) per-variant array (or a scalar applied to all):
+
+      mi_scale      — float multiplier on cloudlet lengths (workload sweep)
+      broker        — "round_robin" | "matchmaking" (names or BROKER_IDS ints)
+      n_vms         — live VM count ≤ cfg.n_vms; the rest are 0-MIPS padding
+      n_cloudlets   — live cloudlet count ≤ cfg.n_cloudlets; rest valid=False
+      mips_dist     — "uniform" | "fixed" | "bimodal" (or MIPS_DIST_IDS ints)
+      n_datacenters — datacenter-topology axis: VMs round-robin over that
+                      many datacenters with seed-deterministic capacity
+                      factors; 0 = flat topology (bit-exact no-op)
+      is_loaded     — 0/1: attach the real ``isLoaded`` workload payload and
+                      report its per-variant checksum (finish times are
+                      untouched; padded rows keep finish exactly 0)
+
+    The closed-form core has no data-dependent loop and every axis is a
+    traced scalar, so B heterogeneous variants cost one XLA dispatch; ≥96
+    variants per jit is the intended operating point.  With ``executor``
+    (a multi-member mesh) the grid is sharded B/n-per-member: the scenario
+    vmap runs inside the partitioned member_fn.  With ``dispatcher`` (an
+    ``ElasticDispatcher``) the grid is submitted as a STREAMING job: cut
+    into ``chunk``-variant chunks (grids larger than device memory), one
+    compile per (geometry, job-signature), surviving IAS scale events
+    between chunks (``on_chunk`` can feed ``observe_load``); the stream is
+    ASYNC double-buffered — ``dispatch_ahead`` overrides the dispatcher's
+    pipeline depth (0 = synchronous baseline), and the grid axes (jnp
+    arrays) are chunked on DEVICE, never round-tripping to host.  ``cfg.
+    use_kernel`` is honored; only the vmappable ``core="scan"`` is
+    supported (the wave loop doesn't batch).
+    """
+    args, with_workload = _batch_axis_args(
+        cfg, seeds, mi_scale=mi_scale, broker=broker, n_vms=n_vms,
+        n_cloudlets=n_cloudlets, mips_dist=mips_dist,
+        n_datacenters=n_datacenters, is_loaded=is_loaded)
+    (seeds, scale, broker, n_vms, n_cl, mips_dist, n_dc, loaded) = args
+    B = seeds.shape[0]
 
     report = None
     t0 = time.perf_counter()
@@ -738,9 +756,13 @@ def run_simulation_batch(cfg, seeds, *, mi_scale=None, broker=None,
         # deliver="host": the result dataclass materializes to numpy right
         # below, so the reduce lands on host directly — one gather, not a
         # sharded device concat plus a gather
+        # checkpoint= journals the scenario stream (durable dispatch): a
+        # long campaign killed mid-sweep resumes bit-identically via
+        # ElasticDispatcher.resume with the same cfg/grid/chunking
         (assign, finish, makespans, workload), report = dispatcher.submit(
             job, args, chunk=chunk, on_chunk=on_chunk,
-            dispatch_ahead=dispatch_ahead, deliver="host")
+            dispatch_ahead=dispatch_ahead, deliver="host",
+            checkpoint=checkpoint)
     elif executor is not None and executor.n_members > 1:
         n = executor.n_members
         pad = (-B) % n                   # round B up to a whole shard each
@@ -799,16 +821,11 @@ def make_scenario_grid(seeds: Sequence[int],
             "n_datacenters": flat[6], "is_loaded": flat[7]}
 
 
-def run_scenario_grid(cfg, grid: Dict[str, np.ndarray], *,
-                      executor=None, dispatcher=None, chunk=None,
-                      on_chunk=None,
-                      dispatch_ahead=None) -> BatchSimulationResult:
-    """Run a ``make_scenario_grid`` product through ``run_simulation_batch``
-    (0-valued VM/cloudlet counts resolve to the config's full counts).
-    With ``dispatcher``, the grid streams through the elastic dispatch
-    middleware in ``chunk``-sized dispatches (see ``run_simulation_batch``).
-    An ``is_loaded`` axis that is all-zero is dropped so the workload
-    payload is never traced for grids that don't use it."""
+def _resolve_grid(cfg, grid: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Resolve a ``make_scenario_grid`` product against a config: 0-valued
+    VM/cloudlet counts become the config's full counts, and an all-zero
+    ``is_loaded`` axis is dropped so the workload payload is never traced
+    for grids that don't use it (the STATIC gate)."""
     g = dict(grid)
     g["n_vms"] = np.where(np.asarray(g["n_vms"]) == 0, cfg.n_vms,
                           g["n_vms"]).astype(np.int32)
@@ -817,8 +834,37 @@ def run_scenario_grid(cfg, grid: Dict[str, np.ndarray], *,
                                 g["n_cloudlets"]).astype(np.int32)
     if "is_loaded" in g and not np.asarray(g["is_loaded"]).any():
         g.pop("is_loaded")                # static gate: skip workload tracing
+    return g
+
+
+def grid_batch_args(cfg, grid: Dict[str, np.ndarray]):
+    """Rebuild the (operand stack, dispatch job) of a scenario-grid stream
+    from its cfg + grid — the resume-path counterpart of
+    ``run_scenario_grid``.  ``ElasticDispatcher.resume`` needs the SAME
+    args and job the original coordinator journaled so the environment
+    signature verifies and replayed chunks are bit-identical; going through
+    the same ``_resolve_grid`` + ``_batch_axis_args`` normalization
+    guarantees that.  Returns ``(args, job, with_workload)``."""
+    g = _resolve_grid(cfg, grid)
+    seeds = g.pop("seeds")
+    args, with_workload = _batch_axis_args(cfg, seeds, **g)
+    return args, scenario_grid_job(cfg, with_workload), with_workload
+
+
+def run_scenario_grid(cfg, grid: Dict[str, np.ndarray], *,
+                      executor=None, dispatcher=None, chunk=None,
+                      on_chunk=None, dispatch_ahead=None,
+                      checkpoint=None) -> BatchSimulationResult:
+    """Run a ``make_scenario_grid`` product through ``run_simulation_batch``
+    (0-valued VM/cloudlet counts resolve to the config's full counts).
+    With ``dispatcher``, the grid streams through the elastic dispatch
+    middleware in ``chunk``-sized dispatches (see ``run_simulation_batch``).
+    An ``is_loaded`` axis that is all-zero is dropped so the workload
+    payload is never traced for grids that don't use it."""
+    g = _resolve_grid(cfg, grid)
     seeds = g.pop("seeds")
     return run_simulation_batch(cfg, seeds, executor=executor,
                                 dispatcher=dispatcher, chunk=chunk,
                                 on_chunk=on_chunk,
-                                dispatch_ahead=dispatch_ahead, **g)
+                                dispatch_ahead=dispatch_ahead,
+                                checkpoint=checkpoint, **g)

@@ -80,6 +80,8 @@ import collections
 import dataclasses
 import functools
 import math
+import signal as _signal
+import threading
 import time
 import warnings
 from typing import Callable, Deque, Dict, Hashable, List, Optional, Tuple
@@ -93,6 +95,10 @@ from repro.core.executor import DistributedExecutor
 from repro.core.faults import (CompileFailedError, FaultInjector,
                                JobFailedError, MemberFailedError, RetryPolicy)
 from repro.core.grid import DataGrid
+from repro.core.journal import (CheckpointPolicy, DrainInterrupted,
+                                JobJournal, ResumeMismatchError, counter_push,
+                                journal_dir, load_checkpoint, load_journal,
+                                stable_signature, tree_digest)
 from repro.core.partition import (DEFAULT_PARTITION_COUNT, PartitionTable,
                                   pad_to_shards, partition_weights_from_keys)
 from repro.core.stats import DispatchStats, QueueSnapshot
@@ -242,7 +248,7 @@ def _row_tree_sum(rows, valid):
     return x[0]
 
 
-def _chunk_tree_reduce(parts, combine):
+def _chunk_tree_reduce(parts, combine, pending=None):
     """Fixed-arity pairwise combine tree keyed on chunk index (a binary
     counter: partial subtrees of equal height merge as chunks arrive, the
     final drain folds survivors highest-level — i.e. earliest chunks —
@@ -251,14 +257,17 @@ def _chunk_tree_reduce(parts, combine):
     because equal power-of-two chunks form exact subtrees of the global
     row-aligned tree — bit-identical ACROSS power-of-two chunk sizes.  For
     int/max reductions the combine is associative and the tree is
-    indistinguishable from the old left fold."""
-    pending: Dict[int, object] = {}
+    indistinguishable from the old left fold.
+
+    ``pending`` seeds the counter with a RESTORED state: a checkpoint of the
+    counter after k in-order chunks is exactly the pow2 subtrees of k's
+    binary decomposition, so resuming pushes chunks k..n-1 through literally
+    the same fold sequence the uninterrupted run would have — bit-identical
+    bytes (the durable-dispatch resume guarantee)."""
+    if pending is None:
+        pending = {}
     for part in parts:
-        level = 0
-        while level in pending:
-            part = jax.tree_util.tree_map(combine, pending.pop(level), part)
-            level += 1
-        pending[level] = part
+        counter_push(pending, part, combine)
     out = None
     for level in sorted(pending):        # ascending: latest chunks first,
         # so each fold keeps earlier chunks on the LEFT of the combine
@@ -403,6 +412,17 @@ class DispatchReport:
     # {cause, dead_member, dead_device, failed_chunk, replayed_chunks,
     #  recovery_s} — recovery_s is detect-to-last-replayed-chunk-validated
     recovery_events: List[dict] = dataclasses.field(default_factory=list)
+    # durable dispatch (``checkpoint=``/``resume``): where this stream's
+    # journal lives, how many durable checkpoints it wrote (write latencies
+    # on the background writer thread), and — on a resumed stream — the
+    # journal it came from, the journaled chunks it skipped, and the lost
+    # in-flight chunks it replayed
+    journal_path: Optional[str] = None
+    checkpoints: int = 0
+    checkpoint_write_s: List[float] = dataclasses.field(default_factory=list)
+    resumed_from: Optional[str] = None
+    chunks_skipped: int = 0
+    chunks_replayed: int = 0
     # queueing-theoretic observability (``collect_stats`` / policy="mmn"):
     # per-stage latency decomposition (queue_wait / service / validate /
     # sojourn: windowed mean + percentiles, log-bucket histogram quantiles),
@@ -436,7 +456,8 @@ class ElasticDispatcher:
                  dispatch_ahead: int = 2,
                  retry_policy: Optional[RetryPolicy] = None,
                  fault_injector: Optional[FaultInjector] = None,
-                 collect_stats: bool = False):
+                 collect_stats: bool = False,
+                 checkpoint: Optional[CheckpointPolicy] = None):
         from repro.core.elastic import ElasticController, entity_pad_multiple
         from repro.core.health import HealthConfig, HealthMonitor
 
@@ -484,6 +505,12 @@ class ElasticDispatcher:
         # pollute the voluntary scaler's load window
         self.retry_policy = retry_policy
         self.fault_injector = fault_injector
+        # durability: default CheckpointPolicy for every stream (submit can
+        # override per call) and the graceful-preemption flag — settable
+        # from a signal handler / another thread, honored at the next chunk
+        # boundary of the active journaled stream (see request_drain)
+        self.checkpoint_policy = checkpoint
+        self._drain_requested = threading.Event()
         self.dead_devices: List = []
         self.fault_monitor = HealthMonitor(hc)
         # per-job-class calibrated IAS step-time targets (auto_scale);
@@ -686,6 +713,164 @@ class ElasticDispatcher:
             self.job_targets[job.signature] = target
         return target
 
+    # ---------------------------------------------------- durable dispatch
+    def request_drain(self) -> None:
+        """Ask the active JOURNALED stream to preempt gracefully: at the
+        next chunk boundary it stops launching, retires + validates every
+        in-flight chunk, checkpoints the validated prefix, journals a drain
+        record, and raises ``DrainInterrupted`` (carrying the partial report
+        and journal path) — ``resume`` picks the stream back up later.
+        Thread- and signal-safe; a stream running without a
+        ``CheckpointPolicy`` ignores it (nothing durable to drain to)."""
+        self._drain_requested.set()
+
+    def install_drain_signal(self, signum: int = _signal.SIGTERM) -> None:
+        """Route a process signal (default SIGTERM — the preemption notice
+        cluster schedulers send before SIGKILL) to ``request_drain``.  Call
+        from the main thread (CPython restricts ``signal.signal``)."""
+        _signal.signal(signum, lambda _s, _f: self.request_drain())
+
+    def _env_signature(self, job: DispatchJob, B: int, chunk: int,
+                       n_chunks: int, items, replicated) -> dict:
+        """The JSON-able environment identity a journal header pins and
+        ``resume`` re-verifies: geometry (backend/devices/axis/partition
+        layout), job identity (name + process-stable signature + reduce
+        semantics), and the chunk plan + dtype/shape structs.  Any
+        difference makes the journaled bytes unreproducible, so resume
+        refuses loudly (``ResumeMismatchError``) instead of diverging."""
+        struct = [[list(a.shape[1:]), np.dtype(a.dtype).str]
+                  for a in jax.tree_util.tree_leaves(items)]
+        rep_struct = [[list(np.shape(a)), np.dtype(np.asarray(a).dtype).str]
+                      for a in jax.tree_util.tree_leaves(replicated)]
+        return {"platform": self.devices[0].platform,
+                "n_devices": len(self.devices),
+                "axis": self.axis,
+                "partition_count": int(self.table.partition_count),
+                "job": job.name,
+                "signature": stable_signature(job.signature),
+                "reduce": job.reduce,
+                "deterministic": bool(job.deterministic),
+                "n_items": int(B), "chunk": int(chunk),
+                "n_chunks": int(n_chunks),
+                "item_struct": struct, "rep_struct": rep_struct}
+
+    def _restore_topology(self, snap: dict) -> None:
+        """Rebuild mesh + ``PartitionTable`` from a journaled snapshot: force
+        the member count (clamped to the surviving pool / IAS bounds), run
+        the normal remesh barrier, then overwrite the freshly-rebalanced
+        owners with the journaled map.  Restoring owners is FIDELITY (the
+        locality-aware placement the dead coordinator had learned), not
+        correctness — results are owner-map-invariant — so a clamped member
+        count skips the owner overwrite rather than failing the resume."""
+        n = max(min(int(snap["n_members"]), len(self.devices),
+                    self.health_cfg.max_instances),
+                self.health_cfg.min_instances)
+        if n != self.n_members:
+            self.controller.force_instances(n)
+            self._remesh(n, reason="resume")
+        if n == int(snap["n_members"]) and "owner" in snap:
+            try:
+                self.table.restore(
+                    {"partition_count": self.table.partition_count,
+                     "n_instances": n, "owner": snap["owner"]})
+            except ValueError as e:
+                raise ResumeMismatchError(
+                    f"journaled partition snapshot does not fit this "
+                    f"dispatcher: {e}") from e
+
+    def resume(self, path, job: DispatchJob, items, *, replicated=(),
+               chunk: Optional[int] = None,
+               on_chunk: Optional[Callable] = None,
+               dispatch_ahead: Optional[int] = None,
+               retry_policy: Optional[RetryPolicy] = None,
+               fault_injector: Optional[FaultInjector] = None,
+               collect_stats: Optional[bool] = None,
+               checkpoint: Optional[CheckpointPolicy] = None
+               ) -> Tuple[object, DispatchReport]:
+        """Continue a journaled stream after the coordinator died (or was
+        drained).  ``path`` is the journal directory a previous ``submit``
+        wrote under a ``CheckpointPolicy``; ``job``/``items``/``replicated``
+        must be the same job — resume VERIFIES the environment signature
+        (geometry, backend, job identity, chunk plan, dtype/shape structs)
+        against the journal header and raises ``ResumeMismatchError`` on any
+        difference, never silently diverging.
+
+        A COMPLETE journal short-circuits: the final checkpoint is loaded
+        (integrity-digested) and returned with ZERO chunk executions —
+        ``resume`` of a finished stream is idempotent.  Otherwise the mesh
+        and ``PartitionTable`` are rebuilt from the last journaled snapshot,
+        the latest checkpoint's partial reduce state is restored (an exact
+        pow2-subtree state of the deterministic chunk tree), journaled
+        chunks before it are SKIPPED, and only the lost in-flight suffix is
+        replayed — each replayed chunk digest-checked against its journal
+        record.  The combined output is bit-identical to the uninterrupted
+        run and is delivered on HOST (the restored base lives in host
+        memory).  Returns ``(outputs, DispatchReport)`` with
+        ``resumed_from`` / ``chunks_skipped`` / ``chunks_replayed`` set."""
+        path = journal_dir(path)
+        state = load_journal(path)
+        if state.header is None:
+            raise ResumeMismatchError(f"no journal header at {path!r} — "
+                                      "nothing to resume")
+        leaves = jax.tree_util.tree_leaves(items)
+        if not leaves:
+            raise ValueError("resume needs the original item arrays")
+        B = int(leaves[0].shape[0])
+        chunk_ = chunk if chunk is not None else (self.chunk_size or B)
+        chunk_ = max(1, min(int(chunk_), max(B, 1)))
+        n_chunks = max(-(-B // chunk_), 1)
+        mine = self._env_signature(job, B, chunk_, n_chunks, items,
+                                   replicated)
+        theirs = state.header.get("env", {})
+        diffs = [f"{k}: journal={theirs.get(k)!r} vs here={mine[k]!r}"
+                 for k in mine if theirs.get(k) != mine[k]]
+        if diffs:
+            raise ResumeMismatchError(
+                "journal environment signature mismatch — resuming would "
+                "not reproduce the journaled bytes:\n  " + "\n  ".join(diffs))
+        policy = checkpoint
+        if policy is None:
+            policy = CheckpointPolicy(
+                path=path,
+                every_n_chunks=int(state.header.get("every_n_chunks", 4)))
+        elif policy.path != path:
+            raise ValueError("checkpoint.path must equal the resume path")
+
+        if state.complete is not None:
+            rec = state.usable_checkpoint(final=True)
+            if rec is None:
+                raise ResumeMismatchError(
+                    f"journal at {path!r} is complete but its final "
+                    "checkpoint directory is missing")
+            outputs, _ = load_checkpoint(path, rec)
+            report = DispatchReport(
+                job=job.name, n_items=B, chunk=chunk_, n_chunks=n_chunks,
+                journal_path=path, resumed_from=path,
+                chunks_skipped=n_chunks, chunks_replayed=0)
+            return outputs, report
+
+        snap = state.last_snapshot
+        if snap is not None:
+            self._restore_topology(snap)
+        base_k, base_state = 0, None
+        rec = state.usable_checkpoint()
+        if rec is not None:
+            base_state, manifest = load_checkpoint(path, rec)
+            base_k = int(manifest["k"])
+        digests = {ci: r["digest"] for ci, r in state.chunks.items()
+                   if ci >= base_k and r.get("digest")}
+        journal = JobJournal.reopen(policy)
+        journal.append({"type": "resume", "k": base_k,
+                        "replayed_from": base_k}, fsync=True)
+        return self.submit(
+            job, items, replicated=replicated, chunk=chunk_,
+            on_chunk=on_chunk, dispatch_ahead=dispatch_ahead,
+            deliver="host", retry_policy=retry_policy,
+            fault_injector=fault_injector, collect_stats=collect_stats,
+            checkpoint=policy,
+            _resume={"journal": journal, "path": path, "base_k": base_k,
+                     "base_state": base_state, "digests": digests})
+
     # ------------------------------------------------------------- submission
     def submit(self, job: DispatchJob, items, *, replicated=(),
                chunk: Optional[int] = None,
@@ -694,7 +879,9 @@ class ElasticDispatcher:
                deliver: str = "device",
                retry_policy: Optional[RetryPolicy] = None,
                fault_injector: Optional[FaultInjector] = None,
-               collect_stats: Optional[bool] = None
+               collect_stats: Optional[bool] = None,
+               checkpoint: Optional[CheckpointPolicy] = None,
+               _resume: Optional[dict] = None
                ) -> Tuple[object, DispatchReport]:
         """Stream ``items`` (a pytree of arrays sharing leading dim B)
         through ``job`` in fixed-shape chunks, as an ASYNC double-buffered
@@ -753,6 +940,21 @@ class ElasticDispatcher:
         fast path is byte-for-byte the unguarded pipeline.  Unrecoverable
         streams raise ``JobFailedError`` carrying the report.  Returns
         ``(outputs, DispatchReport)``.
+
+        Durability: ``checkpoint`` (a ``CheckpointPolicy``, falling back to
+        the dispatcher default) journals the stream — header with the
+        environment signature and chunk plan, a digest record per validated
+        chunk, fault and scale records (with partition snapshots) — and
+        atomically persists the partial reduce state every
+        ``every_n_chunks`` validated chunks (pow2-aligned boundaries of the
+        deterministic chunk tree; writes overlap on a background thread).
+        Kill the coordinator at ANY point and ``resume(path, ...)``
+        reproduces the uninterrupted bytes; ``request_drain`` /
+        ``install_drain_signal`` turn preemption notices into a graceful
+        checkpoint + ``DrainInterrupted``.  A ``JobFailedError``'s report
+        is journaled before raising, so post-mortems survive process death.
+        ``_resume`` is the private handoff from ``resume`` (restored base
+        state, chunks to skip, digests to re-verify).
         """
         if deliver not in ("device", "host"):
             raise ValueError(f"unknown deliver {deliver!r}")
@@ -818,21 +1020,56 @@ class ElasticDispatcher:
                                 n_chunks=n_chunks, dispatch_ahead=depth)
         hits0, builds0 = self.cache.hits, self.cache.builds
         events0 = len(self.scale_events)
+        # durability: open (or adopt, on resume) the stream's journal and
+        # track the checkpointable validated prefix.  ``ck`` holds the
+        # durable reduce state: k = folded prefix length, state = the
+        # binary-counter pending dict (sum/max) or concatenated prefix
+        # (concat), done = journaled chunk indices, host = validated host
+        # copies awaiting the next fold, digests = journaled digests a
+        # resumed run re-verifies its replays against.
+        ckpolicy = (checkpoint if checkpoint is not None
+                    else self.checkpoint_policy)
+        journal: Optional[JobJournal] = None
+        ck: Optional[dict] = None
+        base_k = 0
+        if ckpolicy is not None:
+            if _resume is not None:
+                journal = _resume["journal"]
+                base_k = int(_resume["base_k"])
+                report.resumed_from = _resume["path"]
+                report.chunks_skipped = base_k
+                report.chunks_replayed = n_chunks - base_k
+                base_state = _resume["base_state"]
+            else:
+                env = self._env_signature(job, B, chunk, n_chunks, items,
+                                          replicated)
+                journal = JobJournal.create(ckpolicy, {
+                    "env": env, "n_members": self.n_members,
+                    "owner": self.table.owner.tolist(),
+                    "every_n_chunks": ckpolicy.every_n_chunks})
+                base_state = None
+            ck = {"k": base_k, "state": base_state, "done": set(),
+                  "host": {}, "digests": dict(_resume["digests"])
+                  if _resume is not None else {},
+                  "stride": ckpolicy.every_n_chunks, "n_scale": 0}
+            report.journal_path = journal.path
         # per-chunk results indexed by chunk: trimmed row outputs (concat) or
         # partial aggregates (sum/max/deterministic).  A REPLAY overwrites
         # its chunk's slot; the combine walks slots in chunk-index order, so
-        # retries and recoveries never perturb the reduce tree.
+        # retries and recoveries never perturb the reduce tree.  A resumed
+        # stream fills only slots >= base_k — the skipped prefix lives in
+        # the restored checkpoint state.
         parts: List[Optional[Tuple[int, object]]] = [None] * n_chunks
         part_epochs = set()  # geometries the parts live on
         alpha = getattr(self.health_cfg, "ema_alpha", 0.4)
         stream = {"t_mark": None, "ema": None, "epoch": self._epoch}
-        queue: Deque[int] = collections.deque(range(n_chunks))
+        queue: Deque[int] = collections.deque(range(base_k, n_chunks))
         if collector is not None:
             # a submit stream is a CLOSED arrival process: every chunk is
             # ready at stream start, so they share one enqueue stamp and
             # queue_wait measures time spent behind the pipeline bound
             t0_enq = collector.clock()
-            for _ci in range(n_chunks):
+            for _ci in range(base_k, n_chunks):
                 collector.enqueue(_ci, t0_enq)
         fired_cb: set = set()             # chunks whose on_chunk has run
         attempts: Dict[int, int] = collections.Counter()
@@ -843,6 +1080,150 @@ class ElasticDispatcher:
         open_recoveries: List[dict] = []  # member recoveries awaiting replays
         fail_t: Dict[int, float] = {}     # chunk -> last failure detect time
         val_step = [0]
+        # unguarded journaled streams: launched chunks not yet journaled —
+        # a remesh barrier retires in-flight chunks without passing through
+        # retire_oldest, so journal_settled sweeps them up afterwards
+        unjournaled: set = set()
+
+        def journal_scales():
+            """Journal scale events fired since the last call, each with the
+            post-event member count and partition-owner snapshot — what
+            ``resume`` rebuilds the topology from."""
+            while journal is not None and \
+                    ck["n_scale"] < len(self.scale_events) - events0:
+                ev = self.scale_events[events0 + ck["n_scale"]]
+                journal.append({"type": "scale", "event": ev,
+                                "n_members": self.n_members,
+                                "owner": self.table.owner.tolist()})
+                ck["n_scale"] += 1
+
+        def advance_checkpoint(force: bool = False):
+            """Fold newly-contiguous validated chunks into the durable
+            reduce state and persist it (atomic dir) when a stride boundary
+            is crossed — or at the exact watermark when a drain forces it.
+            The binary-counter state after ANY validated prefix k is exactly
+            the pow2 subtrees of k's binary decomposition, so every
+            checkpoint is an exact subtree state of the deterministic chunk
+            tree and resume is bit-identical.  Runs on the journal WRITER
+            thread (the tail of each ``finish_chunk``); the drain path is
+            the one dispatch-thread caller, and only after ``journal.wait``
+            has idled the queue."""
+            w = ck["k"]
+            while w in ck["host"]:
+                w += 1
+            boundary = w if force else (w // ck["stride"]) * ck["stride"]
+            if boundary <= ck["k"] or (not force and boundary >= n_chunks):
+                return                   # completion writes the final state
+            if job.reduce == "concat":
+                pieces = ([] if ck["state"] is None else [ck["state"]])
+                pieces += [ck["host"].pop(ci)
+                           for ci in range(ck["k"], boundary)]
+                ck["state"] = jax.tree_util.tree_map(
+                    lambda *xs: np.concatenate(xs, axis=0), *pieces)
+                kind = "prefix"
+            else:
+                combine = np.add if job.reduce == "sum" else np.maximum
+                # shallow-copy so a resume's restored base dict is never
+                # mutated — the final combine still needs it untouched
+                pending = dict(ck["state"] or {})
+                for ci in range(ck["k"], boundary):
+                    counter_push(pending, ck["host"].pop(ci), combine)
+                ck["state"] = pending
+                kind = "pending"
+            ck["k"] = boundary
+            journal.checkpoint_now(boundary, kind, ck["state"],
+                                   {"n_members": self.n_members})
+
+        def finish_chunk(ci: int, out, n_live: int, record: dict):
+            """Writer-thread tail of ``journal_chunk``: gather the validated
+            partial to host (trimmed for concat), digest it, write the chunk
+            record, stage the host copy for the fold, and advance the
+            checkpoint watermark.  Everything here walks output bytes —
+            keeping it off the dispatch thread is what makes fault-free
+            journaling overhead a queue put per chunk."""
+            host = jax.tree_util.tree_map(np.asarray, out)
+            if job.reduce == "concat":
+                host = jax.tree_util.tree_map(lambda a: a[:n_live], host)
+            if "digest" not in record:
+                record["digest"] = tree_digest(host)
+            journal.sync_append(record)
+            ck["host"][ci] = host
+            advance_checkpoint()
+
+        def journal_chunk(ci: int):
+            """Close the durable books on one FINAL chunk (validated on the
+            guarded path, retired on the unguarded one).  The heavy tail —
+            host gather, digest, fold, checkpoint — rides the journal
+            writer thread via ``defer``; only a resumed replay digests HERE,
+            inline, because a divergent replay must stop the stream
+            immediately, not surface after more chunks launched."""
+            if journal is None or ci in ck["done"] or ci < base_k:
+                return
+            n_live, out = parts[ci]
+            record = {"type": "chunk", "chunk": int(ci),
+                      "attempt": int(attempts[ci]), "n_live": int(n_live)}
+            expect = ck["digests"].get(ci)
+            if expect is not None:
+                host = jax.tree_util.tree_map(np.asarray, out)
+                if job.reduce == "concat":
+                    host = jax.tree_util.tree_map(lambda a: a[:n_live],
+                                                  host)
+                digest = tree_digest(host)
+                if digest != expect:
+                    raise ResumeMismatchError(
+                        f"replayed chunk {ci} digest {digest[:12]}… does "
+                        f"not match the journaled {expect[:12]}… — the "
+                        "items or job differ from the journaled stream")
+                record["digest"] = digest
+                out = host               # gathered once; the fold reuses it
+            elif not ckpolicy.digest_chunks:
+                record["digest"] = None
+            journal.defer(lambda c=ci, o=out, nl=n_live, r=record:
+                          finish_chunk(c, o, nl, r))
+            ck["done"].add(ci)
+            unjournaled.discard(ci)
+            journal_scales()
+
+        def journal_settled():
+            """Unguarded path only: journal launched chunks that have left
+            the flight queue without passing through ``retire_oldest`` — a
+            remesh barrier's ``_drain_in_flight`` blocks until they are
+            ready, so anything launched and no longer in flight is FINAL."""
+            if journal is None or guarded or not unjournaled:
+                return
+            flying = {entry[0] for entry in self._in_flight}
+            for ci in sorted(unjournaled - flying):
+                journal_chunk(ci)
+
+        def drain_now():
+            """Graceful preemption (``request_drain``/SIGTERM): stop
+            launching, retire + validate everything in flight, checkpoint
+            the exact validated watermark, journal the drain, and raise
+            ``DrainInterrupted`` — ``resume`` continues the stream later."""
+            self._drain_requested.clear()
+            while self._in_flight:
+                retire_oldest()
+            if guarded:
+                sync_validation()
+            journal_settled()
+            journal_scales()
+            journal.wait()               # settle the deferred fold tails so
+            # ck["k"]/["state"] are this thread's to touch
+            advance_checkpoint(force=True)
+            journal.append({"type": "drain", "k": int(ck["k"]),
+                            "remaining": sorted(queue)}, fsync=True)
+            journal.wait()
+            report.checkpoints = journal.n_checkpoints
+            report.checkpoint_write_s = list(journal.write_s)
+            if collector is not None:
+                for w_s in journal.write_s:
+                    collector.record_checkpoint(w_s)
+                report.stats = collector.summary(n_servers=1)
+            report.wall_s = time.perf_counter() - t_start
+            journal.close()
+            raise DrainInterrupted(
+                f"stream of job {job.name!r} drained at validated prefix "
+                f"{ck['k']}/{n_chunks} on request", report, journal.path)
 
         def mark(compiled: bool, t_launch: float):
             """Sample one per-chunk step time — the retirement-to-retirement
@@ -897,6 +1278,8 @@ class ElasticDispatcher:
             mark(compiled, t_launch)
             if guarded:
                 sync_validation()
+            elif journal is not None:
+                journal_chunk(ci)        # unguarded: retirement is final
 
         def note_validated(ci: int, now: float):
             """Close the books on a validated chunk: stamp the recovery
@@ -913,6 +1296,7 @@ class ElasticDispatcher:
                 if not open_rec["outstanding"]:
                     open_rec["event"]["recovery_s"] = now - open_rec["t0"]
                     open_recoveries.remove(open_rec)
+            journal_chunk(ci)            # guarded: validation is final
 
         def recover_member(device, slot: int, failed_ci: int, cause: str):
             """Member-failure recovery: the replay set is the failed chunk
@@ -950,6 +1334,10 @@ class ElasticDispatcher:
             report.failures.append(
                 {"chunk": ci, "kind": kind, "attempt": attempts[ci],
                  "member": member, "detail": detail, "wall_s": wall})
+            if journal is not None:      # retry/fault events are durable too
+                journal.append({"type": "fault", "chunk": int(ci),
+                                "kind": kind, "attempt": int(attempts[ci]),
+                                "member": member, "detail": detail})
             if attempts[ci] >= policy.max_attempts:
                 raise JobFailedError(
                     f"chunk {ci} of job {job.name!r} failed {attempts[ci]}x"
@@ -1052,6 +1440,11 @@ class ElasticDispatcher:
                         {"chunk": ci, "kind": "member_crash",
                          "attempt": attempts[ci], "member": e.member,
                          "detail": str(e), "wall_s": None})
+                    if journal is not None:
+                        journal.append(
+                            {"type": "fault", "chunk": int(ci),
+                             "kind": "member_crash", "member": e.member,
+                             "detail": str(e)})
                     recover_member(e.device, e.member, ci,
                                    cause="member crash detected at launch")
                     return False
@@ -1099,6 +1492,8 @@ class ElasticDispatcher:
             # reduce boundary, not here: an eager mid-stream slice of an
             # unevenly-sharded chunk would cost a per-chunk reshard
             parts[ci] = (n_live, out)
+            if journal is not None and not guarded:
+                unjournaled.add(ci)
             part_epochs.add(self._epoch)
             report.members_per_chunk.append(M)
             if guarded:
@@ -1112,11 +1507,16 @@ class ElasticDispatcher:
                            else None)
                     pending_val.append(
                         (ci, out, t_launch, M, L, fin, compiled_now))
+            if depth == 0 and not guarded:
+                journal_chunk(ci)        # sync baseline: launch is final
             return True
 
         t_start = time.perf_counter()
         try:
             while queue:
+                journal_settled()        # barrier-drained chunks are final
+                if journal is not None and self._drain_requested.is_set():
+                    drain_now()          # raises DrainInterrupted
                 ci = queue.popleft()
                 if not launch(ci):
                     continue
@@ -1134,8 +1534,10 @@ class ElasticDispatcher:
                     continue
                 # tail of the stream (validation failures may refill queue)
                 # (a collector must also block-retire the tail: lazy drop
-                # would leave its last chunks' retire/validate un-stamped)
-                if (guarded or collector is not None
+                # would leave its last chunks' retire/validate un-stamped;
+                # a journaled stream must retire every chunk through
+                # journal_chunk, so it never lazy-drops either)
+                if (guarded or collector is not None or journal is not None
                         or (self.auto_scale and on_chunk is None)):
                     # the IAS needs samples even from streams shorter than
                     # the pipeline depth, and the guarded path must block
@@ -1152,7 +1554,26 @@ class ElasticDispatcher:
                     # its own reduce boundary (host delivery materializes
                     # right below anyway)
                     self._in_flight.clear()
-        except Exception:
+        except DrainInterrupted:
+            raise                        # graceful preemption, not a dying
+            # stream: the journal is closed, calibration stays valid
+        except Exception as exc:
+            # durable post-mortem: a JobFailedError's structured report is
+            # journaled BEFORE raising (it would otherwise die with the
+            # coordinator); other exceptions leave an aborted marker.  Best
+            # effort — a failing journal must not mask the real error.
+            if journal is not None:
+                try:
+                    if isinstance(exc, JobFailedError):
+                        journal.append(
+                            {"type": "job_failed", "message": str(exc),
+                             "report": exc.report.summary()}, fsync=True)
+                    else:
+                        journal.append({"type": "aborted",
+                                        "error": repr(exc)}, fsync=True)
+                    journal.close()
+                except Exception:
+                    pass
             # a dying stream must not poison the job class's IAS
             # calibration: its compile/retry-inflated first sample would
             # steer the NEXT stream's scaler (explicit calibrate_target
@@ -1169,12 +1590,36 @@ class ElasticDispatcher:
 
         # one geometry throughout, an async stream, and device delivery:
         # combine on device and expose the result lazily; host delivery, a
-        # mid-stream remesh (parts on different device sets) or the
+        # mid-stream remesh (parts on different device sets), a resumed
+        # stream (the restored base lives in host memory) or the
         # synchronous baseline (parts already np, legacy host-output
         # semantics) combine on host
         combine_on_device = (deliver == "device" and depth > 0
-                             and len(part_epochs) <= 1)
-        outputs = self._combine(job, parts, combine_on_device)
+                             and len(part_epochs) <= 1 and _resume is None)
+        resume_base = None if _resume is None else _resume["base_state"]
+        outputs = self._combine(job, parts[base_k:], combine_on_device,
+                                base=resume_base)
+        if journal is not None:
+            # completion is durable too: journal any straggler chunks and
+            # tail scale events, persist the combined output as the FINAL
+            # checkpoint, mark the stream complete (fsync'd) — resuming a
+            # complete journal then returns this state with zero executions
+            journal_settled()
+            journal_scales()
+            host_out = jax.tree_util.tree_map(np.asarray, outputs)
+            journal.write_checkpoint(n_chunks, "final", host_out,
+                                     {"n_members": self.n_members})
+            journal.append({"type": "complete", "n_chunks": n_chunks},
+                           fsync=True)
+            journal.wait()
+            report.checkpoints = journal.n_checkpoints
+            report.checkpoint_write_s = list(journal.write_s)
+            if collector is not None:
+                for w_s in journal.write_s:
+                    collector.record_checkpoint(w_s)
+            journal.close()
+            self._drain_requested.clear()  # a drain that lost the race to
+            # completion must not preempt the NEXT stream
         report.compiles = self.cache.builds - builds0
         report.cache_hits = self.cache.hits - hits0
         report.scale_events = len(self.scale_events) - events0
@@ -1222,7 +1667,8 @@ class ElasticDispatcher:
         return sl, valid
 
     @staticmethod
-    def _combine(job: DispatchJob, parts, combine_on_device: bool):
+    def _combine(job: DispatchJob, parts, combine_on_device: bool,
+                 base=None):
         """Cross-chunk reduction at the stream's reduce boundary.  Each part
         is ``(n_live, chunk_output)``; padded rows of concat outputs are
         trimmed HERE, off the hot loop.  On ONE geometry (no mid-stream
@@ -1230,7 +1676,13 @@ class ElasticDispatcher:
         lazily; across geometries the parts live on different device sets
         (eager device ops would not colocate) and the synchronous baseline
         already materialized per chunk, so those combine on host — the
-        IEEE-754 f32 ops are bitwise identical either way."""
+        IEEE-754 f32 ops are bitwise identical either way.
+
+        ``base`` is a resumed stream's restored checkpoint state (chunks
+        before the checkpoint never re-ran): the concatenated row prefix
+        for "concat", or the binary-counter pending dict for "sum"/"max" —
+        seeding ``_chunk_tree_reduce`` so the replayed suffix folds through
+        the identical tree the uninterrupted run used."""
         if combine_on_device:
             asarray = lambda a: a
             cat = lambda *p: jnp.concatenate(p, axis=0)
@@ -1242,9 +1694,15 @@ class ElasticDispatcher:
         if job.reduce == "concat":
             trimmed = [jax.tree_util.tree_map(
                 lambda a: asarray(a)[:n_live], out) for n_live, out in parts]
+            if base is not None:
+                trimmed.insert(0, jax.tree_util.tree_map(asarray, base))
             return jax.tree_util.tree_map(cat, *trimmed)
         aggs = [jax.tree_util.tree_map(asarray, out) for _, out in parts]
-        return _chunk_tree_reduce(aggs, add if job.reduce == "sum" else mx)
+        pending = (None if base is None
+                   else {int(lvl): jax.tree_util.tree_map(asarray, t)
+                         for lvl, t in base.items()})
+        return _chunk_tree_reduce(aggs, add if job.reduce == "sum" else mx,
+                                  pending=pending)
 
     # ------------------------------------------------------------ executables
     def _executable(self, job: DispatchJob, chunk_tree, replicated, L: int):

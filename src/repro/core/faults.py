@@ -30,6 +30,15 @@ mid-stream a recoverable event instead of a dead job:
                                        ``RetryPolicy`` chunk deadline
                         compile_fail   building chunk ``chunk``'s executable
                                        raises once
+                        coordinator_crash  the COORDINATOR process itself
+                                       dies at chunk ``chunk``'s launch —
+                                       ``CoordinatorCrashError`` by default
+                                       (in-process preemption a test can
+                                       catch), ``os._exit(137)`` when
+                                       ``hard_exit=True`` (indistinguishable
+                                       from ``kill -9``); recovery is
+                                       ``ElasticDispatcher.resume`` from the
+                                       journal, not a retry
 
   ``RetryPolicy``     what ``submit`` does about a detected failure: per-chunk
                       attempt budget, chunk deadline, exponential backoff,
@@ -49,7 +58,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-FAULT_KINDS = ("member_crash", "nan_poison", "stall", "compile_fail")
+FAULT_KINDS = ("member_crash", "nan_poison", "stall", "compile_fail",
+               "coordinator_crash")
 
 
 # ------------------------------------------------------------------ failures
@@ -72,6 +82,18 @@ class CompileFailedError(RuntimeError):
 
     def __init__(self, chunk: int):
         super().__init__(f"compile failed for chunk {chunk}")
+        self.chunk = chunk
+
+
+class CoordinatorCrashError(RuntimeError):
+    """The coordinator process was killed mid-stream (a scheduled
+    ``coordinator_crash`` fault in its default in-process mode).  NOT a
+    retryable chunk failure: the dispatcher lets it propagate — the stream
+    dies exactly as a real preemption would — and recovery is
+    ``ElasticDispatcher.resume`` from the journaled state."""
+
+    def __init__(self, chunk: int):
+        super().__init__(f"coordinator crashed at chunk {chunk}")
         self.chunk = chunk
 
 
@@ -170,10 +192,15 @@ class FaultInjector:
     ``random_schedule`` derives a reproducible schedule from a seed.
     ``fired`` logs every fault that actually triggered, in firing order."""
 
-    def __init__(self, schedule: Sequence[FaultSpec] = ()):
+    def __init__(self, schedule: Sequence[FaultSpec] = (),
+                 hard_exit: bool = False):
         self.schedule: List[FaultSpec] = list(schedule)
         self.dead_devices: Set = set()
         self.fired: List[dict] = []
+        # coordinator_crash mode: False raises CoordinatorCrashError (an
+        # in-process preemption tests can catch and resume from), True calls
+        # os._exit(137) — no atexit, no finally blocks, the SIGKILL shape
+        self.hard_exit = hard_exit
 
     @classmethod
     def random_schedule(cls, seed: int, n_chunks: int, max_members: int = 1,
@@ -182,7 +209,10 @@ class FaultInjector:
                         stall_delay_s: float = 0.25) -> "FaultInjector":
         """A reproducible chaos schedule: ``n_faults`` specs drawn uniformly
         over (kind, chunk, member) from ``np.random.RandomState(seed)`` —
-        the same seed always yields the same schedule, on any host."""
+        the same seed always yields the same schedule, on any host.  The
+        default pool is ALL of ``FAULT_KINDS`` (``coordinator_crash``
+        included since the durable-dispatch PR); pass an explicit ``kinds``
+        to pin a pre-existing schedule."""
         rng = np.random.RandomState(seed)
         specs = [FaultSpec(kind=str(rng.choice(list(kinds))),
                            chunk=int(rng.randint(0, max(n_chunks, 1))),
@@ -207,10 +237,19 @@ class FaultInjector:
     # ---------------------------------------------------------------- hooks
     def on_launch(self, chunk: int, devices: Sequence) -> None:
         """Called before every chunk launch with the devices backing the
-        current mesh.  Fires pending ``member_crash`` specs for this chunk
-        (marking the slot's device dead), then fails the launch if ANY mesh
-        device is dead — a killed member fails every launch touching it
-        until the dispatcher retires it from the pool."""
+        current mesh.  Fires a pending ``coordinator_crash`` first — the
+        coordinator dies before it can launch anything (raise, or hard
+        ``os._exit(137)``; see ``hard_exit``) — then pending
+        ``member_crash`` specs for this chunk (marking the slot's device
+        dead), then fails the launch if ANY mesh device is dead — a killed
+        member fails every launch touching it until the dispatcher retires
+        it from the pool."""
+        if self._take("coordinator_crash", chunk) is not None:
+            self._log("coordinator_crash", chunk, None)
+            if self.hard_exit:
+                import os
+                os._exit(137)
+            raise CoordinatorCrashError(chunk)
         while True:
             spec = self._take("member_crash", chunk)
             if spec is None:

@@ -1,0 +1,548 @@
+"""Durable dispatch — the append-only job journal + checkpointed reduce state.
+
+PR 6 made ``ElasticDispatcher`` survive *member* failure; this module makes it
+survive the COORDINATOR: kill the driver mid-stream (SIGKILL, preemption, a
+scheduled ``coordinator_crash`` fault) and ``ElasticDispatcher.resume`` picks
+the stream back up from durable state, bit-identical to the uninterrupted run.
+The thesis pitches Cloud²Sim as "a general purpose auto scaler middleware for
+a multi-tenanted deployment" — a middleware serving long tenant jobs must
+outlive its own restarts, and the CloudSim-line campaigns it hosts are exactly
+the runs too expensive to redo from scratch.
+
+Two durability layers cooperate (see docs/robustness.md, "Coordinator failure
+model"):
+
+``JobJournal``      an append-only JSONL journal: one header record pinning
+                    the job + environment signature and the chunk schedule,
+                    then per-chunk records of validated output DIGESTS,
+                    fault/retry records, scale events with partition-table
+                    snapshots, checkpoint records, and a final ``complete``
+                    record carrying the result digest.  Records are
+                    self-contained lines; a torn tail line (the process died
+                    mid-write) is ignored on load.
+
+``CheckpointPolicy``  when/where ``submit`` persists PARTIAL REDUCE STATE.
+                    Boundaries are aligned to power-of-two subtree roots of
+                    the PR 5 deterministic chunk tree: the binary-counter
+                    state after a validated prefix of k chunks is exactly the
+                    pow2 subtrees of k's binary decomposition, so a
+                    checkpointed partial float sum is an *exact* subtree
+                    state and resume reproduces the uninterrupted bytes.
+                    Writes reuse the seed's atomic tmp-dir+rename idiom
+                    (``train/checkpoint.py``) on a background writer thread
+                    (``train/async_ckpt.py``) so they never block the
+                    dispatch-ahead pipeline.
+
+Resume verifies the journal's environment signature (geometry, backend,
+dtype/shape structs, chunk plan) against the resuming dispatcher and raises a
+loud ``ResumeMismatchError`` on ANY divergence — never silent drift; replayed
+chunks are additionally digest-checked against their journaled records.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "CheckpointPolicy", "DrainInterrupted", "JobJournal", "JournalState",
+    "ResumeMismatchError", "counter_push", "counter_drain", "journal_dir",
+    "stable_signature", "tree_decode", "tree_digest", "tree_encode",
+]
+
+
+def journal_dir(path: str) -> str:
+    """Normalize a journal reference: accept either the journal DIRECTORY or
+    its ``journal.jsonl`` file and return the directory — callers paste
+    whichever path the crash log showed them."""
+    if os.path.basename(path) == "journal.jsonl" or os.path.isfile(path):
+        return os.path.dirname(path) or "."
+    return path
+
+
+class ResumeMismatchError(RuntimeError):
+    """The journal's environment signature (or a replayed chunk's digest, or
+    a checkpoint's integrity digest) does not match the resuming run.  Loud
+    by design: a mismatched resume must never silently diverge from the
+    journaled stream."""
+
+
+class DrainInterrupted(RuntimeError):
+    """A stream stopped early because ``request_drain`` (or an installed
+    SIGTERM handler) asked for graceful preemption: in-flight chunks were
+    retired, validated state was checkpointed, and the journal is ready for
+    ``resume``.  Carries the partial ``DispatchReport`` and the journal
+    path — the graceful twin of ``JobFailedError``."""
+
+    def __init__(self, message: str, report, journal_path: str):
+        super().__init__(message)
+        self.report = report
+        self.journal_path = journal_path
+
+
+# -------------------------------------------------------------------- policy
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """When/where ``submit`` journals and checkpoints a stream.
+
+    path            journal directory (created on first write)
+    every_n_chunks  checkpoint the validated prefix every N chunks, ROUNDED
+                    UP to a power of two — boundaries then sit on pow2
+                    subtree roots of the deterministic chunk tree, so each
+                    persisted partial is an exact subtree state (the
+                    alignment rule docs/robustness.md documents)
+    async_write     hand encoded state to a background writer thread (the
+                    ``train/async_ckpt`` pattern) so checkpoint writes never
+                    block the dispatch-ahead pipeline; False writes inline
+                    (tests / post-mortem debugging)
+    digest_chunks   journal a sha256 digest per validated chunk; resume
+                    verifies replayed chunks against it (bit-identity made
+                    loud) at the cost of one host copy per chunk
+    keep            rotated intermediate checkpoint dirs to retain (the
+                    final checkpoint is never rotated away)
+    fsync           "checkpoint" (default) fsyncs the journal at checkpoint /
+                    completion / drain records, "always" at every record,
+                    "never" leaves flushing to the OS
+    """
+    path: str
+    every_n_chunks: int = 4
+    async_write: bool = True
+    digest_chunks: bool = True
+    keep: int = 2
+    fsync: str = "checkpoint"
+
+    def __post_init__(self):
+        if self.every_n_chunks < 1:
+            raise ValueError("every_n_chunks must be >= 1")
+        if self.fsync not in ("always", "checkpoint", "never"):
+            raise ValueError(f"unknown fsync mode {self.fsync!r}")
+        object.__setattr__(self, "every_n_chunks",
+                           _next_pow2(self.every_n_chunks))
+
+
+# ------------------------------------------------- pytree encode / decode
+
+def tree_encode(tree) -> Tuple[dict, List[np.ndarray]]:
+    """Encode a pytree of arrays/scalars/containers into a JSON-serializable
+    spec plus a flat list of numpy leaves.  Self-describing and dependency-
+    free (no pickled treedefs): dict/list/tuple/None/str/bool/int/float
+    containers round-trip exactly, array leaves land in the flat list in
+    spec order.  The checkpoint property test round-trips this."""
+    leaves: List[np.ndarray] = []
+
+    def enc(node):
+        if node is None:
+            return {"t": "none"}
+        if isinstance(node, bool):          # before int: bool is an int
+            return {"t": "py", "v": node}
+        if isinstance(node, (int, float, str)):
+            return {"t": "py", "v": node}
+        if isinstance(node, dict):
+            return {"t": "dict", "k": [enc(k) for k in node],
+                    "v": [enc(v) for v in node.values()]}
+        if isinstance(node, tuple):
+            return {"t": "tuple", "v": [enc(v) for v in node]}
+        if isinstance(node, list):
+            return {"t": "list", "v": [enc(v) for v in node]}
+        arr = np.asarray(node)              # jax array / np scalar / ndarray
+        leaves.append(arr)
+        return {"t": "arr", "i": len(leaves) - 1}
+
+    return enc(tree), leaves
+
+
+def tree_decode(spec: dict, leaves) -> object:
+    """Inverse of ``tree_encode``: rebuild the pytree from (spec, leaves)."""
+
+    def dec(node):
+        t = node["t"]
+        if t == "none":
+            return None
+        if t == "py":
+            return node["v"]
+        if t == "dict":
+            return {dec(k): dec(v) for k, v in zip(node["k"], node["v"])}
+        if t == "tuple":
+            return tuple(dec(v) for v in node["v"])
+        if t == "list":
+            return [dec(v) for v in node["v"]]
+        if t == "arr":
+            return np.asarray(leaves[node["i"]])
+        raise ValueError(f"unknown spec node type {t!r}")
+
+    return dec(spec)
+
+
+def tree_digest(tree) -> str:
+    """sha256 over the encoded spec + every leaf's dtype/shape/bytes — the
+    chunk/checkpoint integrity digest.  Canonical C-order bytes, so the
+    digest is placement-independent (device vs host copies agree)."""
+    spec, leaves = tree_encode(tree)
+    h = hashlib.sha256(json.dumps(spec, sort_keys=True).encode())
+    for leaf in leaves:
+        arr = np.ascontiguousarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def stable_signature(obj) -> str:
+    """A process-stable string form of a job signature: callables render as
+    ``fn:module.qualname`` (plain ``repr`` leaks memory addresses, which
+    would make every resume a false ``ResumeMismatchError``), containers
+    recurse, everything else reprs."""
+    if callable(obj):
+        mod = getattr(obj, "__module__", "?")
+        name = getattr(obj, "__qualname__", getattr(obj, "__name__", "?"))
+        return f"fn:{mod}.{name}"
+    if isinstance(obj, (tuple, list)):
+        inner = ",".join(stable_signature(v) for v in obj)
+        return f"({inner})" if isinstance(obj, tuple) else f"[{inner}]"
+    if isinstance(obj, dict):
+        inner = ",".join(f"{stable_signature(k)}:{stable_signature(v)}"
+                         for k, v in sorted(obj.items(), key=repr))
+        return "{" + inner + "}"
+    return repr(obj)
+
+
+# ------------------------------------------------- binary-counter fold
+
+def counter_push(pending: Dict[int, object], part, combine) -> None:
+    """Push one chunk partial into the binary-counter tree state (the PR 5
+    ``_chunk_tree_reduce`` counter, factored out so the checkpoint fold and
+    the final combine share ONE tree).  ``pending`` maps level -> partial
+    subtree; after k pushes its occupied levels are exactly the binary
+    decomposition of k, each entry the root of an exact pow2 subtree —
+    which is why a checkpoint of ``pending`` at any validated prefix is an
+    exact subtree state and resume is bit-identical."""
+    import jax
+
+    level = 0
+    while level in pending:
+        part = jax.tree_util.tree_map(combine, pending.pop(level), part)
+        level += 1
+    pending[level] = part
+
+
+def counter_drain(pending: Dict[int, object], combine):
+    """Fold the surviving counter levels, ascending — latest chunks first,
+    so each fold keeps earlier chunks on the LEFT of the combine."""
+    import jax
+
+    out = None
+    for level in sorted(pending):
+        out = (pending[level] if out is None
+               else jax.tree_util.tree_map(combine, pending[level], out))
+    return out
+
+
+# ------------------------------------------------------------- the journal
+
+def _ck_dirname(k: int, kind: str) -> str:
+    return "ck_final" if kind == "final" else f"ck_{int(k):08d}"
+
+
+class JobJournal:
+    """Append-only journal writer with atomic background checkpoint writes.
+
+    One instance per active stream.  ``append`` emits one self-contained
+    JSON line; ``write_checkpoint`` encodes the state tree on the CALLING
+    thread (host numpy — the device->host snapshot already happened) and,
+    on the writer thread, writes ``<path>/ck_*/`` atomically (tmp dir +
+    rename, the ``train/checkpoint.py`` idiom) and only THEN appends the
+    checkpoint record — a record therefore always points at a fully-renamed
+    directory.  Writer failures surface on the next call / ``wait`` instead
+    of dying silently (the ``train/async_ckpt`` contract)."""
+
+    def __init__(self, policy: CheckpointPolicy, *, fresh: bool):
+        self.policy = policy
+        self.path = policy.path
+        self.journal_file = os.path.join(self.path, "journal.jsonl")
+        os.makedirs(self.path, exist_ok=True)
+        if fresh:
+            for name in os.listdir(self.path):
+                if name == "journal.jsonl" or name.startswith("ck_"):
+                    full = os.path.join(self.path, name)
+                    shutil.rmtree(full) if os.path.isdir(full) \
+                        else os.remove(full)
+        self._f = open(self.journal_file, "a", encoding="utf-8")
+        self.n_checkpoints = 0
+        self.write_s: List[float] = []      # per-checkpoint write latency
+        self._err: Optional[BaseException] = None
+        self._q: Optional["queue.Queue"] = None
+        self._thread: Optional[threading.Thread] = None
+        if policy.async_write:
+            self._q = queue.Queue()
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    @classmethod
+    def create(cls, policy: CheckpointPolicy, header: dict) -> "JobJournal":
+        """Fresh journal for a new stream: wipes any previous journal at the
+        path and writes the header record first."""
+        j = cls(policy, fresh=True)
+        j.append({"type": "header", "version": 1, **header}, fsync=True)
+        return j
+
+    @classmethod
+    def reopen(cls, policy: CheckpointPolicy) -> "JobJournal":
+        """Append-mode writer for ``resume`` — existing records are kept."""
+        return cls(policy, fresh=False)
+
+    # ----------------------------------------------------------- writer side
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError("journal writer failed") from err
+
+    def append(self, record: dict, fsync: bool = False) -> None:
+        """Append one JSON record line (ordered with checkpoint writes)."""
+        self._raise_pending()
+        record = dict(record)
+        record.setdefault("t", time.time())
+        if self._q is not None:
+            self._q.put(("record", record, fsync))
+        else:
+            self._write_record(record, fsync)
+
+    def defer(self, fn) -> None:
+        """Run ``fn()`` on the writer thread, ordered with every queued
+        record and checkpoint.  The dispatcher hands the whole per-chunk
+        journaling tail over this way — device->host gather, sha256 digest,
+        checkpoint fold + write — because all of it walks every output byte
+        and would otherwise serialize against the dispatch-ahead pipeline.
+        ``fn`` must write through the synchronous internals
+        (``sync_append`` / ``checkpoint_now``): a nested ``append`` would
+        re-enqueue behind later items and break record order.  Runs inline
+        when ``async_write`` is off; failures surface on the next call /
+        ``wait`` like any writer error."""
+        self._raise_pending()
+        if self._q is not None:
+            self._q.put(("defer", fn))
+        else:
+            fn()
+
+    def sync_append(self, record: dict, fsync: bool = False) -> None:
+        """Write one record line ON THE CALLING THREAD — for ``defer``
+        callbacks and post-``wait`` code where queue order is settled."""
+        record = dict(record)
+        record.setdefault("t", time.time())
+        self._write_record(record, fsync)
+
+    def checkpoint_now(self, k: int, kind: str, state, meta: dict) -> None:
+        """Synchronous ``write_checkpoint``: encode + digest + atomic write
+        on the calling thread.  Same ``defer``-callback contract as
+        ``sync_append``."""
+        spec, leaves = tree_encode(state)
+        manifest = {"k": int(k), "kind": kind, "spec": spec,
+                    "digest": tree_digest(state), **dict(meta)}
+        self._write_checkpoint(manifest, leaves)
+
+    def write_checkpoint(self, k: int, kind: str, state, meta: dict) -> None:
+        """Persist reduce state atomically; ``kind`` is "pending" (the
+        binary-counter dict), "prefix" (concat prefix list), or "final"
+        (the completed stream's combined output).  Encode + digest + write
+        all happen on the writer thread when async — the caller only pays a
+        queue put; the state tree handed over is never mutated afterwards
+        (folds rebuild fresh dicts/arrays)."""
+        self._raise_pending()
+        if self._q is not None:
+            self._q.put(("checkpoint_state", int(k), kind, state, dict(meta)))
+        else:
+            spec, leaves = tree_encode(state)
+            manifest = {"k": int(k), "kind": kind, "spec": spec,
+                        "digest": tree_digest(state), **meta}
+            self._write_checkpoint(manifest, leaves)
+
+    def wait(self) -> None:
+        """Block until every queued record/checkpoint is on disk."""
+        if self._q is not None:
+            self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        try:
+            if self._q is not None:
+                self._q.join()
+                self._q.put(None)
+                if self._thread is not None:
+                    self._thread.join(timeout=10)
+        finally:
+            try:
+                self._f.close()
+            except Exception:
+                pass
+        self._raise_pending()
+
+    # ------------------------------------------------------- worker internals
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                if item[0] == "record":
+                    self._write_record(item[1], item[2])
+                elif item[0] == "defer":
+                    item[1]()
+                else:                        # "checkpoint_state"
+                    _, k, kind, state, meta = item
+                    spec, leaves = tree_encode(state)
+                    manifest = {"k": k, "kind": kind, "spec": spec,
+                                "digest": tree_digest(state), **meta}
+                    self._write_checkpoint(manifest, leaves)
+            except BaseException as e:       # surfaced on next append/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write_record(self, record: dict, fsync: bool) -> None:
+        self._f.write(json.dumps(record, default=str) + "\n")
+        self._f.flush()
+        mode = self.policy.fsync
+        if mode == "always" or (mode == "checkpoint" and fsync):
+            os.fsync(self._f.fileno())
+
+    def _write_checkpoint(self, manifest: dict, leaves) -> None:
+        t0 = time.perf_counter()
+        final = os.path.join(self.path, _ck_dirname(manifest["k"],
+                                                    manifest["kind"]))
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        # raw per-leaf .npy files, not a zipped .npz: the zip container
+        # CRCs + copies every byte, which at MB-scale pending states costs
+        # more CPU than the entire rest of the checkpoint
+        manifest = dict(manifest, n_leaves=len(leaves))
+        for i, leaf in enumerate(leaves):
+            np.save(os.path.join(tmp, f"a{i}.npy"), np.asarray(leaf))
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)               # atomic: never a torn checkpoint
+        write_s = time.perf_counter() - t0
+        self.write_s.append(write_s)
+        self.n_checkpoints += 1
+        self._write_record(
+            {"type": "checkpoint", "k": manifest["k"],
+             "kind": manifest["kind"], "dir": os.path.basename(final),
+             "digest": manifest["digest"], "write_s": write_s,
+             "t": time.time()}, fsync=True)
+        self._rotate()
+
+    def _rotate(self) -> None:
+        dirs = sorted(d for d in os.listdir(self.path)
+                      if d.startswith("ck_") and d != "ck_final"
+                      and not d.endswith(".tmp"))
+        for old in dirs[:-max(self.policy.keep, 1)]:
+            shutil.rmtree(os.path.join(self.path, old))
+
+
+# ------------------------------------------------------------- reader side
+
+@dataclasses.dataclass
+class JournalState:
+    """Everything a resume needs, parsed from one journal directory."""
+    path: str
+    header: Optional[dict] = None
+    chunks: Dict[int, dict] = dataclasses.field(default_factory=dict)
+    scales: List[dict] = dataclasses.field(default_factory=list)
+    checkpoints: List[dict] = dataclasses.field(default_factory=list)
+    complete: Optional[dict] = None
+    failed: Optional[dict] = None
+    records: List[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def last_snapshot(self) -> Optional[dict]:
+        """The most recent partition-table snapshot (scale records carry
+        one), falling back to the header's starting topology."""
+        for rec in reversed(self.scales):
+            if "owner" in rec:
+                return rec
+        if self.header and "owner" in self.header:
+            return self.header
+        return None
+
+    def usable_checkpoint(self, *, final: bool = False) -> Optional[dict]:
+        """Latest checkpoint record whose directory still exists on disk
+        (rotation may have dropped older ones).  ``final=True`` looks only
+        at the completed stream's final-output checkpoint."""
+        for rec in reversed(self.checkpoints):
+            if (rec.get("kind") == "final") != final:
+                continue
+            if os.path.isdir(os.path.join(self.path, rec["dir"])):
+                return rec
+        return None
+
+
+def load_journal(path: str) -> JournalState:
+    """Parse a journal directory.  Torn tail lines (the coordinator died
+    mid-append) are ignored; every complete record is kept in order."""
+    path = journal_dir(path)
+    state = JournalState(path=path)
+    journal_file = os.path.join(path, "journal.jsonl")
+    if not os.path.exists(journal_file):
+        return state
+    with open(journal_file, encoding="utf-8") as f:
+        raw = f.read()
+    for line in raw.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue                        # torn tail line: crashed mid-write
+        state.records.append(rec)
+        kind = rec.get("type")
+        if kind == "header":
+            state.header = rec
+        elif kind == "chunk":
+            state.chunks[int(rec["chunk"])] = rec
+        elif kind == "scale":
+            state.scales.append(rec)
+        elif kind == "checkpoint":
+            state.checkpoints.append(rec)
+        elif kind == "complete":
+            state.complete = rec
+        elif kind == "job_failed":
+            state.failed = rec
+    return state
+
+
+def load_checkpoint(path: str, record: dict):
+    """Load + integrity-check one checkpoint directory.  Returns the decoded
+    state tree; raises ``ResumeMismatchError`` if the stored digest does not
+    match the journaled record or the re-computed digest of the loaded
+    bytes (corruption must be loud, never silently divergent)."""
+    d = os.path.join(path, record["dir"])
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("digest") != record.get("digest"):
+        raise ResumeMismatchError(
+            f"checkpoint {record['dir']}: manifest digest does not match the "
+            "journal record — the directory does not belong to this journal")
+    leaves = [np.load(os.path.join(d, f"a{i}.npy"))
+              for i in range(int(manifest["n_leaves"]))]
+    state = tree_decode(manifest["spec"], leaves)
+    if tree_digest(state) != manifest["digest"]:
+        raise ResumeMismatchError(
+            f"checkpoint {record['dir']}: stored arrays do not reproduce "
+            "the manifest digest — corrupted checkpoint")
+    return state, manifest

@@ -121,7 +121,8 @@ class MapReduceEngine:
         return self.dispatcher.mesh      # tracks scale events
 
     def run(self, job: MapReduceJob, files: jax.Array, *,
-            chunk: Optional[int] = None, on_chunk: Optional[Callable] = None):
+            chunk: Optional[int] = None, on_chunk: Optional[Callable] = None,
+            checkpoint=None):
         """files: (n_files, file_len) int tokens.  ``chunk`` streams the
         corpus ``chunk`` files per dispatch (None = one dispatch); the IAS
         may re-home the stream between chunks (``on_chunk`` feeds load).
@@ -129,9 +130,27 @@ class MapReduceEngine:
         output of a previous dispatcher job; see the dispatcher's
         ``device_slice_min_bytes``) is chunked on device by ``slice_chunk``
         and never round-trips to host; a host (or tiny) corpus is sliced
-        host-side while the previous chunk computes (the async pipeline)."""
+        host-side while the previous chunk computes (the async pipeline).
+        ``checkpoint`` (a ``core.journal.CheckpointPolicy``) makes the
+        stream DURABLE: journal + pow2-aligned reduce-state checkpoints;
+        after a coordinator death, ``resume_run`` continues it."""
         out, report = self.dispatcher.submit(
-            self._dispatch_job(job), files, chunk=chunk, on_chunk=on_chunk)
+            self._dispatch_job(job), files, chunk=chunk, on_chunk=on_chunk,
+            checkpoint=checkpoint)
+        self.last_report = report
+        return jnp.asarray(out)
+
+    def resume_run(self, path: str, job: MapReduceJob, files: jax.Array, *,
+                   chunk: Optional[int] = None,
+                   on_chunk: Optional[Callable] = None):
+        """Continue a journaled ``run`` after a coordinator crash/drain —
+        the MapReduce face of ``ElasticDispatcher.resume``: same job + same
+        corpus (the environment signature is verified), journaled chunks
+        are skipped, and the reduced result is bit-identical to the
+        uninterrupted run."""
+        out, report = self.dispatcher.resume(
+            path, self._dispatch_job(job), files, chunk=chunk,
+            on_chunk=on_chunk)
         self.last_report = report
         return jnp.asarray(out)
 

@@ -177,6 +177,34 @@ class PartitionTable:
     def load(self) -> np.ndarray:
         return np.bincount(self.owner, minlength=self.n_instances)
 
+    # ------------------------------------------------- durable snapshot
+    def snapshot(self) -> dict:
+        """JSON-able image of the table — journaled per scale event so a
+        coordinator restart can rebuild the exact ownership map instead of
+        re-deriving placement (which a locality-aware rebalance would not
+        reproduce: the observed key weights died with the coordinator)."""
+        return {"partition_count": int(self.partition_count),
+                "n_instances": int(self.n_instances),
+                "owner": self.owner.tolist()}
+
+    def restore(self, snap: dict) -> None:
+        """Inverse of ``snapshot``.  Validates shape and owner range loudly
+        (a snapshot from a different table layout must never be applied
+        silently — the resume path turns the ValueError into a
+        ``ResumeMismatchError``)."""
+        owner = np.asarray(snap["owner"], dtype=self.owner.dtype)
+        if int(snap["partition_count"]) != self.partition_count \
+                or owner.shape != (self.partition_count,):
+            raise ValueError(
+                f"snapshot has partition_count {snap['partition_count']}, "
+                f"table has {self.partition_count}")
+        n = int(snap["n_instances"])
+        if n < 1 or owner.min() < 0 or owner.max() >= n:
+            raise ValueError("snapshot owners out of range for its "
+                             f"n_instances={n}")
+        self.n_instances = n
+        self.owner = owner
+
 
 def partition_weights_from_keys(key_weights,
                                 partition_count: int = DEFAULT_PARTITION_COUNT

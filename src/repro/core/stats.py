@@ -308,6 +308,7 @@ class DispatchStats:
         self.windows: Dict[str, StatsWindow] = {
             name: StatsWindow(warmup, cooldown) for name in INTERVALS}
         self.stall_s: List[float] = []
+        self.checkpoint_s: List[float] = []
         self._open: Dict[int, ChunkTimeline] = {}    # enqueued, not launched
         self._live: Dict[int, ChunkTimeline] = {}    # launched, not validated
         self._last_retire: Optional[float] = None
@@ -362,6 +363,14 @@ class DispatchStats:
         histogram so docs/robustness.md's stall records are quantified."""
         self.stall_s.append(float(delay_s))
         self.hist.record("stall", delay_s)
+
+    def record_checkpoint(self, write_s: float) -> None:
+        """One durable checkpoint's write latency (tmp-dir + rename wall on
+        the writer thread — overlap means it is NOT stream wall time; the
+        stream-side cost is the host fold + digest, bounded by
+        BENCH_resume.json's overhead entries)."""
+        self.checkpoint_s.append(float(write_s))
+        self.hist.record("checkpoint", write_s)
 
     # ------------------------------------------------------------ intervals
     def _close(self, rec: ChunkTimeline) -> None:
@@ -453,6 +462,10 @@ class DispatchStats:
             out["stall"] = {"n": float(len(self.stall_s)),
                             "total_s": float(sum(self.stall_s)),
                             "p99": self.hist["stall"].quantile(99)}
+        if self.checkpoint_s:
+            out["checkpoint"] = {"n": float(len(self.checkpoint_s)),
+                                 "total_s": float(sum(self.checkpoint_s)),
+                                 "p99": self.hist["checkpoint"].quantile(99)}
         out["queue"] = self.queue_summary(n_servers)
         return out
 
