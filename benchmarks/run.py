@@ -46,7 +46,8 @@ sys.path.insert(0, os.path.join(_root, "src"))
 REGRESSION_TOLERANCE = 0.20
 BEST_OF_N = max(3, int(os.environ.get("BENCH_CHECK_BEST_OF", "3")))
 # entry fields that identify a scan_s measurement across runs
-_ID_KEYS = ("core", "n_cloudlets", "n_members", "n_scenarios", "n_vms")
+_ID_KEYS = ("chunk", "core", "n_cloudlets", "n_members", "n_scenarios",
+            "n_vms")
 
 
 def _scan_entries(obj, out):
@@ -109,13 +110,13 @@ def main() -> None:
     from benchmarks import (batch_grid, checkpoint_resume, core_scaling,
                             dist_scaling, fault_recovery, fig_5_1_scaling,
                             fig_5_4_matchmaking, fig_5_9_mapreduce,
-                            queue_stats, serve_brokers, speedup_model,
-                            table_5_1, table_5_2_elastic)
+                            kernel_tuning, queue_stats, serve_brokers,
+                            speedup_model, table_5_1, table_5_2_elastic)
     check = "--check" in sys.argv
     mods = (table_5_1, core_scaling, batch_grid, dist_scaling,
             fig_5_1_scaling, fig_5_4_matchmaking, fig_5_9_mapreduce,
             table_5_2_elastic, speedup_model, serve_brokers, fault_recovery,
-            queue_stats, checkpoint_resume)
+            queue_stats, checkpoint_resume, kernel_tuning)
     if check:
         # only modules whose COMMITTED artifact holds scan_s entries can be
         # compared — skip the rest (e.g. batch_grid's throughput-only JSON)

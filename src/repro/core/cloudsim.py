@@ -61,6 +61,7 @@ class SimulationConfig:
     dist_method: str = "exchange"                  # | "replicated" (PR-2 core)
     exchange_slack: Optional[float] = None         # None = exact auto capacity
     use_kernel: bool = False                       # Pallas seg-scan kernel
+    kernel_chunk: Optional[int] = None             # None = roofline-autotuned
     is_loaded: bool = False                        # attach a real workload
     workload_dim: int = 64                         # loaded-matmul size
     workload_iters_per_gmi: float = 2.0            # iterations per 1000 MI
@@ -316,10 +317,11 @@ def run_simulation(cfg: SimulationConfig, mesh: Mesh,
         finish, makespan = des_scan.simulate_completion_distributed(
             *core_args, executor, vm_owner=vm_owner, method=cfg.dist_method,
             slack=cfg.exchange_slack, use_kernel=cfg.use_kernel,
-            weight_observer=weight_observer)
+            kernel_chunk=cfg.kernel_chunk, weight_observer=weight_observer)
     elif cfg.core == "scan":
         finish, makespan = des_scan.simulate_completion_scan_jit(
-            *core_args, use_kernel=cfg.use_kernel)
+            *core_args, use_kernel=cfg.use_kernel,
+            kernel_chunk=cfg.kernel_chunk)
     else:
         raise ValueError(f"unknown core {cfg.core!r}")
     jax.block_until_ready(finish)

@@ -16,10 +16,15 @@ against the newer spellings; this module papers over both directions:
   * ``CompilerParams`` — pallas-TPU renamed ``TPUCompilerParams`` to
                          ``CompilerParams``; this resolves whichever the
                          installed jax ships.
+
+It also owns the ONE definition of the Pallas interpret-mode default
+(``resolve_kernel_interpret``) that des_scan and the kernel wrappers used to
+each spell out as ``jax.default_backend() != "tpu"``.
 """
 from __future__ import annotations
 
 import inspect
+import warnings
 
 import jax
 
@@ -57,3 +62,55 @@ from jax.experimental.pallas import tpu as _pltpu  # noqa: E402
 
 CompilerParams = (getattr(_pltpu, "CompilerParams", None)
                   or _pltpu.TPUCompilerParams)
+
+
+# --------------------------------------------- Pallas interpret-mode default
+
+class KernelInterpretFallbackWarning(UserWarning):
+    """``use_kernel=True`` off-TPU runs the kernel's interpret/emulation
+    fallback, not a compiled accelerator kernel — kernel timings measured in
+    this mode are NOT hardware kernel performance."""
+
+
+def pallas_interpret_default() -> bool:
+    """The repo-wide Pallas interpret default: compiled on TPU, interpret
+    (or bit-exact jnp emulation, for kernels that provide one) elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+_warned_interpret_fallback = False
+
+
+def resolve_kernel_interpret(interpret, *, warn: bool = True,
+                             context: str = "seg_scan") -> bool:
+    """Resolve an ``interpret=None`` kernel flag to the backend default.
+
+    The previously thrice-duplicated ``jax.default_backend() != "tpu"``
+    default lives HERE.  When the default silently lands on the fallback
+    (``use_kernel=True`` on a non-TPU backend), a one-time
+    ``KernelInterpretFallbackWarning`` is emitted so CPU "kernel" runs can't
+    masquerade as compiled-kernel measurements; an EXPLICIT
+    ``interpret=True`` is a deliberate choice and never warns."""
+    global _warned_interpret_fallback
+    if interpret is not None:
+        return bool(interpret)
+    interpret = pallas_interpret_default()
+    if interpret and warn and not _warned_interpret_fallback:
+        _warned_interpret_fallback = True
+        warnings.warn(
+            f"use_kernel=True on backend {jax.default_backend()!r}: the "
+            f"{context} kernel falls back to interpret/emulation mode "
+            f"(kernel_path='interpret'); timings do not reflect compiled "
+            f"accelerator kernels", KernelInterpretFallbackWarning,
+            stacklevel=3)
+    return interpret
+
+
+def kernel_path(use_kernel: bool, interpret=None):
+    """The kernel path a scan configuration will actually execute:
+    ``None`` (lax path), ``"compiled"``, or ``"interpret"`` — recorded in
+    ``DispatchReport.kernel_path`` for honest benchmark provenance."""
+    if not use_kernel:
+        return None
+    return "interpret" if resolve_kernel_interpret(
+        interpret, warn=False) else "compiled"

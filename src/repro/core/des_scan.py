@@ -20,9 +20,20 @@ partitionable by VM ownership (distributed phase 4).
 
 Execution paths:
   * ``simulate_completion_scan``        — pure-jnp sort + segmented cumsum
-  * ``use_kernel=True``                 — the Pallas chunked segmented-scan
-                                          kernel (``kernels/seg_scan``),
-                                          interpret-mode fallback off-TPU
+  * ``use_kernel=True``                 — the v2 position-gated fused kernel
+                                          (``kernels/seg_scan/v2``): one
+                                          3-operand stable sort replaces
+                                          lexsort + two gathers, the chunked
+                                          Pallas scan reproduces the lax
+                                          addition tree BIT-exactly, and the
+                                          sentinel mask + result scatter are
+                                          fused into the epilogue kernel.
+                                          Off-TPU the kernel falls back to a
+                                          bit-exact jnp emulation (one-time
+                                          ``KernelInterpretFallbackWarning``);
+                                          ``kernel_chunk=None`` resolves via
+                                          the roofline autotuner
+                                          (``roofline/autotune``).
   * ``simulate_completion_distributed`` — COMPUTE-partitioned phase 4: an
                                           owner-keyed exchange re-homes each
                                           cloudlet to the member owning its
@@ -118,14 +129,25 @@ def _segmented_cumsum(term, start):
 
 def simulate_completion_scan(vm_assign, cloudlet_mi, vm_mips, valid, *,
                              use_kernel: bool = False,
-                             interpret: Optional[bool] = None):
+                             interpret: Optional[bool] = None,
+                             kernel_chunk: Optional[int] = None):
     """Closed-form time-shared completion: sort by (vm, mi) + segmented scan.
 
     Numerically equivalent to ``cloudsim.simulate_completion`` (atol 1e-3):
     returns (finish_times (C,), makespan).  Cloudlets that never run —
     invalid padding rows, zero-length cloudlets, cloudlets bound to
     zero-MIPS (padded) VMs — keep finish time 0, exactly like the wave loop.
-    """
+
+    ``use_kernel=True`` runs the v2 fused kernel path, BIT-identical to the
+    default path: one stable 3-operand ``lax.sort`` carries (seg, mi, row)
+    together (same permutation as the lexsort, without the two post-sort
+    gathers), ``seg_cumsum_v2`` reproduces ``_segmented_cumsum``'s exact
+    position-gated addition tree, and the sentinel mask + scatter fuse into
+    the epilogue.  ``kernel_chunk`` (power of two, static) picks the
+    in-kernel level split; ``None`` asks the roofline autotuner for the
+    persisted/analytic choice.  ``interpret=None`` resolves to the backend
+    default — compiled on TPU, bit-exact jnp emulation elsewhere (a
+    one-time ``KernelInterpretFallbackWarning`` flags the fallback)."""
     C = cloudlet_mi.shape[0]
     V = vm_mips.shape[0]
     mi = jnp.where(valid, cloudlet_mi, 0.0).astype(jnp.float32)
@@ -135,12 +157,20 @@ def simulate_completion_scan(vm_assign, cloudlet_mi, vm_mips, valid, *,
     runnable = valid & (mi > _EPS) & (mips[vm_assign] > 0.0)
     seg = jnp.where(runnable, vm_assign, V).astype(jnp.int32)
 
-    # lexicographic sort: primary by segment, secondary by length ascending
-    order = jnp.lexsort((mi, seg))
-    seg_s = seg[order]
-    mi_s = mi[order]
-
     idx = jnp.arange(C, dtype=jnp.int32)
+    if use_kernel:
+        # fused gather: ONE stable sort with (seg, mi) keys carries mi and
+        # the row index as payload — the identical permutation to
+        # lexsort((mi, seg)) (both are the stable (seg, mi) sort), minus
+        # the two O(C) gathers the lax path pays after it.
+        seg_s, mi_s, order = jax.lax.sort((seg, mi, idx), num_keys=2,
+                                          is_stable=True)
+    else:
+        # lexicographic sort: primary by segment, secondary by length asc
+        order = jnp.lexsort((mi, seg))
+        seg_s = seg[order]
+        mi_s = mi[order]
+
     prev_seg = jnp.concatenate([jnp.full((1,), -1, jnp.int32), seg_s[:-1]])
     start = seg_s != prev_seg                       # segment boundaries
     seg_start = jax.lax.cummax(jnp.where(start, idx, 0))
@@ -159,16 +189,22 @@ def simulate_completion_scan(vm_assign, cloudlet_mi, vm_mips, valid, *,
     term = delta * (k - pos) * inv_mips             # (m_j−m_{j-1})(k−j+1)/μ
 
     if use_kernel:
-        from repro.kernels.seg_scan.kernel import seg_cumsum
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        f_s = seg_cumsum(term, start.astype(jnp.float32),
-                         interpret=interpret)
+        from repro.core.compat import resolve_kernel_interpret
+        from repro.kernels.seg_scan.v2 import scatter_finish_v2, seg_cumsum_v2
+        interpret = resolve_kernel_interpret(interpret)
+        if kernel_chunk is None:
+            from repro.roofline.autotune import tuned_chunk
+            kernel_chunk = tuned_chunk(int(C))
+        f_s = seg_cumsum_v2(term, start, chunk=kernel_chunk,
+                            interpret=interpret)
+        sentinel = seg_s == V                       # sentinel never finishes
+        finish = scatter_finish_v2(f_s, order, sentinel, chunk=kernel_chunk,
+                                   interpret=interpret)
+        f_s = jnp.where(sentinel, 0.0, f_s)
     else:
         f_s = _segmented_cumsum(term, start)
-
-    f_s = jnp.where(seg_s == V, 0.0, f_s)           # sentinel never finishes
-    finish = jnp.zeros((C,), jnp.float32).at[order].set(f_s)
+        f_s = jnp.where(seg_s == V, 0.0, f_s)       # sentinel never finishes
+        finish = jnp.zeros((C,), jnp.float32).at[order].set(f_s)
     makespan = jnp.max(f_s, initial=0.0)
     return finish, makespan
 
@@ -176,7 +212,8 @@ def simulate_completion_scan(vm_assign, cloudlet_mi, vm_mips, valid, *,
 # jitted entry point with the flags static, shared so repeated calls (e.g.
 # run_simulation) hit the compile cache instead of re-wrapping in jax.jit
 simulate_completion_scan_jit = jax.jit(
-    simulate_completion_scan, static_argnames=("use_kernel", "interpret"))
+    simulate_completion_scan,
+    static_argnames=("use_kernel", "interpret", "kernel_chunk"))
 
 
 # ------------------------------------------------- distributed phase 4
@@ -242,12 +279,13 @@ def invalidate_dist_core(mesh=None, axis: Optional[str] = None) -> int:
     return n
 
 
-def _dist_core_replicated(mesh, axis, V, use_kernel, interpret):
+def _dist_core_replicated(mesh, axis, V, use_kernel, interpret,
+                          kernel_chunk=None):
     """The PR-2 distributed core, kept as the benchmark baseline: every
     member runs the IDENTICAL full O(C log C) scan and masks the finish
     entries of the VMs it doesn't own — result-partitioned, not
     compute-partitioned."""
-    key = (mesh, axis, "replicated", V, use_kernel, interpret)
+    key = (mesh, axis, "replicated", V, use_kernel, interpret, kernel_chunk)
     cached = _DIST_CORE_CACHE.get(key)
     if cached is not None:
         return cached
@@ -263,7 +301,8 @@ def _dist_core_replicated(mesh, axis, V, use_kernel, interpret):
         # and member count: partials are disjoint, and x + 0.0 == x exactly.
         f, _ = simulate_completion_scan(assign, mi, mips, val,
                                         use_kernel=use_kernel,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        kernel_chunk=kernel_chunk)
         mine = owner[assign] == mid[0]
         return jnp.where(mine, f, 0.0)[None, :]     # (1, C) partial
 
@@ -281,13 +320,15 @@ def _dist_core_replicated(mesh, axis, V, use_kernel, interpret):
     return fn
 
 
-def _dist_core_exchange(mesh, axis, V, C_pad, block, use_kernel, interpret):
+def _dist_core_exchange(mesh, axis, V, C_pad, block, use_kernel, interpret,
+                        kernel_chunk=None):
     """Compute-partitioned distributed core: bucket by VM owner, all-to-all,
     then each member lexsorts + scans ONLY its own cloudlets.  ``C_pad`` and
     ``block`` (the per-(src, dst) exchange capacity) are static — part of
     this cache key — while the VM→member ownership map stays a RUNTIME
     operand, so rebalancing the partition table never recompiles."""
-    key = (mesh, axis, "exchange", V, C_pad, block, use_kernel, interpret)
+    key = (mesh, axis, "exchange", V, C_pad, block, use_kernel, interpret,
+           kernel_chunk)
     cached = _DIST_CORE_CACHE.get(key)
     if cached is not None:
         return cached
@@ -332,7 +373,8 @@ def _dist_core_exchange(mesh, axis, V, C_pad, block, use_kernel, interpret):
         # --- 3. sort + scan ONLY the ~C/M cloudlets this member owns -----
         f_loc, _ = simulate_completion_scan(r_assign, r_mi, mips, r_val,
                                             use_kernel=use_kernel,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            kernel_chunk=kernel_chunk)
         # --- 4. scatter finishes back to global rows; disjoint partials --
         part = jnp.zeros((C_pad,), jnp.float32).at[r_orig].set(
             f_loc, mode="drop")
@@ -362,6 +404,7 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
                                     slack: Optional[float] = None,
                                     use_kernel: bool = False,
                                     interpret: Optional[bool] = None,
+                                    kernel_chunk: Optional[int] = None,
                                     weight_observer: Optional[
                                         Callable] = None):
     """Phase 4 distributed: per-VM completion segments are independent, so
@@ -407,8 +450,9 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
     if vm_owner is None:
         vm_owner = default_vm_owner(V, M)
     vm_owner = jnp.asarray(vm_owner, jnp.int32)
-    if interpret is None and use_kernel:
-        interpret = jax.default_backend() != "tpu"
+    if use_kernel:
+        from repro.core.compat import resolve_kernel_interpret
+        interpret = resolve_kernel_interpret(interpret)
     if weight_observer is not None:
         a = np.asarray(vm_assign)
         live = np.asarray(valid).astype(bool)
@@ -416,7 +460,7 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
 
     if method == "replicated":
         fn = _dist_core_replicated(executor.mesh, executor.axis, V,
-                                   use_kernel, interpret)
+                                   use_kernel, interpret, kernel_chunk)
         return fn(vm_owner, vm_assign, cloudlet_mi, vm_mips, valid)
     if method != "exchange":
         raise ValueError(f"unknown distributed method {method!r}")
@@ -449,7 +493,7 @@ def simulate_completion_distributed(vm_assign, cloudlet_mi, vm_mips, valid,
 
     while True:
         fn = _dist_core_exchange(executor.mesh, executor.axis, V, C_pad,
-                                 block, use_kernel, interpret)
+                                 block, use_kernel, interpret, kernel_chunk)
         finish, makespan, overflow, need = fn(vm_owner, vm_assign,
                                               cloudlet_mi, vm_mips, valid)
         if int(overflow) == 0:
@@ -582,8 +626,9 @@ def _grid_scenario(cfg, with_workload, seed, mi_scale, broker, n_vms,
     assign = jnp.where(broker == BROKER_IDS["round_robin"], rr, mm)
     workload = (_grid_workload(cfg, mi, valid, is_loaded) if with_workload
                 else jnp.zeros((), jnp.float32))
-    finish, makespan = simulate_completion_scan(assign, mi, vm_mips, valid,
-                                                use_kernel=cfg.use_kernel)
+    finish, makespan = simulate_completion_scan(
+        assign, mi, vm_mips, valid, use_kernel=cfg.use_kernel,
+        kernel_chunk=cfg.kernel_chunk)
     return assign, finish, makespan, workload
 
 
@@ -628,9 +673,12 @@ def scenario_grid_job(cfg, with_workload: bool = False) -> DispatchJob:
         del valid                          # concat path: pad rows trimmed off
         return jax.vmap(fn)(*local)
 
+    from repro.core.compat import kernel_path
+
     return DispatchJob(name="scenario_grid",
                        signature=("scenario_grid", cfg, with_workload),
-                       member_fn=member_fn, reduce="concat")
+                       member_fn=member_fn, reduce="concat",
+                       kernel_path=kernel_path(cfg.use_kernel))
 
 
 def _axis_array(value, B, dtype, name, id_map=None):

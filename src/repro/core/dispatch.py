@@ -235,7 +235,18 @@ def _row_tree_sum(rows, valid):
     result is BIT-identical for any pad length >= the live row count, i.e.
     for any member count's chunk padding.  This is the row-level half of the
     deterministic float reduction; ``_chunk_tree_reduce`` is the cross-chunk
-    half."""
+    half.
+
+    This function MUST be compiled in its own executable, never fused with
+    the job's producer (see ``_build_member``): a member_fn ending in a bare
+    multiply (``x * w``) otherwise compiles differently at M=1 — the whole
+    chunk is one XLA fusion and the multiply contracts into the level-0
+    adds as FMA (single rounding), while at M>1 the shard_map boundary
+    blocks that contraction — losing member-count bit-identity for
+    product-shaped jobs.  HLO-level guards (``optimization_barrier``,
+    ``reduce_precision(8, 23)``, bitcast round-trips) are all folded away
+    by the CPU pipeline before codegen; an executable boundary is the only
+    fence LLVM's FMA contraction cannot cross."""
     mask_shape = (rows.shape[0],) + (1,) * (rows.ndim - 1)
     x = jnp.where(valid.reshape(mask_shape), rows, jnp.zeros((), rows.dtype))
     n = x.shape[0]
@@ -377,6 +388,10 @@ class DispatchJob:
     reduce: str = "concat"               # "concat" | "sum" | "max"
     deterministic: bool = False          # per-row tree-reduced float sum
     target_step_time: Optional[float] = None   # per-job-class IAS target
+    # which seg-scan path the job's computation runs, for benchmark
+    # provenance: None (lax), "compiled" (real Pallas kernel), or
+    # "interpret" (off-TPU fallback) — see compat.kernel_path
+    kernel_path: Optional[str] = None
 
     def __post_init__(self):
         if (self.member_fn is None) == (self.global_fn is None):
@@ -403,6 +418,11 @@ class DispatchReport:
     max_in_flight: int = 0               # peak launched-but-unretired chunks
     staged_device: int = 0               # chunks cut on device (slice_chunk)
     staged_host: int = 0                 # chunks sliced/padded host-side
+    # seg-scan kernel provenance (from DispatchJob.kernel_path): None for
+    # the lax path, "compiled" for the real Pallas kernel, "interpret" for
+    # the off-TPU fallback — so a CPU "kernel" benchmark can't silently
+    # report interpreter timings as kernel timings
+    kernel_path: Optional[str] = None
     ema_step_s: float = 0.0              # last step-time EMA (auto_scale)
     retries: int = 0                     # chunk replays this stream
     # structured failure record: one dict per DETECTED failure —
@@ -846,7 +866,8 @@ class ElasticDispatcher:
             report = DispatchReport(
                 job=job.name, n_items=B, chunk=chunk_, n_chunks=n_chunks,
                 journal_path=path, resumed_from=path,
-                chunks_skipped=n_chunks, chunks_replayed=0)
+                chunks_skipped=n_chunks, chunks_replayed=0,
+                kernel_path=job.kernel_path)
             return outputs, report
 
         snap = state.last_snapshot
@@ -1017,7 +1038,8 @@ class ElasticDispatcher:
                 NonPow2ChunkWarning, stacklevel=2)
 
         report = DispatchReport(job=job.name, n_items=B, chunk=chunk,
-                                n_chunks=n_chunks, dispatch_ahead=depth)
+                                n_chunks=n_chunks, dispatch_ahead=depth,
+                                kernel_path=job.kernel_path)
         hits0, builds0 = self.cache.hits, self.cache.builds
         events0 = len(self.scale_events)
         # durability: open (or adopt, on resume) the stream's journal and
@@ -1770,20 +1792,42 @@ class ElasticDispatcher:
                     lambda a: _row_tree_sum(a, valid), out)
             return out
 
-        return jax.jit(call, donate_argnums=self._chunk_donate)
+        if not job.deterministic:
+            return jax.jit(call, donate_argnums=self._chunk_donate)
+
+        # deterministic: the row tree compiles as its OWN executable so the
+        # member_fn's producer can never FMA-contract into the level-0 adds
+        # at M=1 (the executable boundary is the only fence the CPU backend
+        # respects — see _row_tree_sum).  The rows stage keeps the chunk
+        # donation; both stages enqueue async, so pipelining is unchanged.
+        def rows_call(chunk_tree, valid, *rep):
+            return executor.execute_on_key_owners(
+                body, (chunk_tree, valid), replicated_args=rep,
+                out_specs=out_specs)
+
+        rows_fn = jax.jit(rows_call, donate_argnums=self._chunk_donate)
+        tree_fn = jax.jit(lambda out, valid: jax.tree_util.tree_map(
+            lambda a: _row_tree_sum(a, valid), out))
+
+        def split_call(chunk_tree, valid, *rep):
+            return tree_fn(rows_fn(chunk_tree, valid, *rep), valid)
+
+        return split_call
 
     def _build_global(self, job: DispatchJob):
         executor = self.executor
         axis = self.axis
 
         def run(chunk_tree, valid, *rep):
-            out = job.global_fn(chunk_tree, valid, *rep)
-            if job.deterministic:
-                out = jax.tree_util.tree_map(
-                    lambda a: _row_tree_sum(a, valid), out)
-            return out
+            return job.global_fn(chunk_tree, valid, *rep)
 
         jitted = jax.jit(run, donate_argnums=self._chunk_donate)
+        # deterministic: the row tree compiles as its OWN executable (a
+        # nested jit would inline into the outer trace) so the global_fn's
+        # producer can never FMA-contract into the level-0 adds — the same
+        # fence as _build_member (see _row_tree_sum)
+        tree_fn = jax.jit(lambda out, valid: jax.tree_util.tree_map(
+            lambda a: _row_tree_sum(a, valid), out))
 
         def call(chunk_tree, valid, *rep):
             # auto-SPMD: place the chunk partitioned, the rest replicated,
@@ -1794,6 +1838,9 @@ class ElasticDispatcher:
             rep = tuple(jax.tree_util.tree_map(
                 lambda a: executor.put(jnp.asarray(a), P()), r)
                 for r in rep)
-            return jitted(sharded, valid, *rep)
+            out = jitted(sharded, valid, *rep)
+            if job.deterministic:
+                out = tree_fn(out, valid)
+            return out
 
         return call

@@ -1,0 +1,237 @@
+"""Position-gated segmented cumsum v2 — bit-identical to the lax scan core.
+
+The v1 kernel (``kernel.py``) computes each chunk with an (L×L) masked
+matmul and rebases on an inter-chunk carry.  That is fast but reassociates
+the per-segment sum, so it is only TOLERANCE-equivalent to des_scan's
+``_segmented_cumsum`` — and every bit-identity guarantee (elastic replay,
+journal resume, deterministic reduce) therefore pins ``use_kernel=False``.
+
+v2 reproduces ``_segmented_cumsum``'s EXACT addition tree.  The lax core is
+a position-gated Hillis–Steele doubling scan over the whole array:
+
+    x_0       = term
+    x_{j+1}(p) = x_j(p) + [pos(p) >= d] * x_j(p - d),   d = 2^j,  d < C
+
+where ``pos`` is the element's in-segment position.  v2 splits the SAME
+step set at the chunk length L (a power of two):
+
+  * steps ``d < L`` run inside a Pallas kernel, one grid step per chunk.
+    The operand ``x_j(p - d)`` crosses the chunk edge only into the
+    previous chunk's last ``d`` lanes, so the kernel carries each level's
+    full before-state in a ``(log2 L, L)`` VMEM scratch: at level ``j`` it
+    reads the previous chunk's saved ``x_j``, saves its own, then applies
+    the gated add.  The grid is sequential, so the carry never leaves chip.
+  * steps ``d >= L`` (all multiples of L) run as plain jnp shifts on the
+    flat result — a shift by a multiple of L preserves chunk-local offsets,
+    so these are ordinary global Hillis–Steele steps.
+
+The union of both step sets is exactly ``{2^j : 2^j < C}`` — the lax step
+set — because ``L = min(chunk, pow2_ceil(C))`` and, for a power of two P,
+``P < pow2_ceil(C)  <=>  P < C``.  Every gated-off step adds an exact 0 of
+the operand dtype, so the floating-point result is BIT-identical to
+``_segmented_cumsum`` for any chunk size, array length, or layout.
+
+Execution modes (``interpret`` resolved by ``compat.resolve_kernel_interpret``):
+
+  * compiled (TPU)          — the Pallas kernel above + jnp tail steps.
+  * interpret fallback      — bit-exact jnp EMULATION: the verbatim
+    ``_segmented_cumsum`` op sequence.  Off-TPU the Pallas interpreter
+    pays per-grid-step Python overhead (~seconds at C=1M); the emulation
+    is the same math at lax speed, so CPU runs keep the bit-identity
+    contract without the interpreter tax.
+  * ``force_pallas=True``   — run the REAL kernel under the Pallas
+    interpreter regardless of backend; the parity suite uses this to pin
+    the kernel logic itself (small C only — the interpreter unrolls the
+    grid).
+
+``scatter_finish_v2`` is the fused epilogue: sentinel masking + the
+scatter back to pre-sort row order in one kernel (one pass over the
+result instead of a masked select materialized between two XLA ops).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compat import CompilerParams, resolve_kernel_interpret
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def _in_segment_pos(start):
+    """In-segment position — the VERBATIM op sequence ``_segmented_cumsum``
+    uses (exact int scan), so the gate values are bit-identical."""
+    C = start.shape[0]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    seg_start = jax.lax.cummax(jnp.where(start, idx, 0))
+    return idx - seg_start
+
+
+def _emulate(term, pos):
+    """The lax doubling scan, gated on a precomputed ``pos`` — op-for-op the
+    body of ``des_scan._segmented_cumsum`` (the parity suite pins this)."""
+    C = term.shape[0]
+    x = term
+    d = 1
+    while d < C:
+        shifted = jnp.concatenate([jnp.zeros((d,), x.dtype), x[:-d]])
+        x = x + jnp.where(pos >= d, shifted, jnp.zeros((), x.dtype))
+        d *= 2
+    return x
+
+
+def _scan_kernel(levels, term_ref, pos_ref, out_ref, carry_ref):
+    """In-chunk steps d = 1..L/2 with each level's inter-chunk operand
+    carried in scratch.  ``carry_ref[j]`` holds the PREVIOUS chunk's state
+    before step 2^j; it is read, then overwritten with this chunk's state,
+    then the gated add runs — the save-before-update order is what makes
+    the next grid step see exactly ``x_j`` of this chunk."""
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = term_ref[...]                       # (1, L)
+    pos = pos_ref[...]                      # (1, L) int32
+    L = x.shape[1]
+    zero = jnp.zeros((), x.dtype)
+    for j in range(levels):
+        d = 1 << j
+        prev = carry_ref[j:j + 1, :]        # previous chunk's x_j, (1, L)
+        carry_ref[j:j + 1, :] = x
+        shifted = jnp.concatenate([prev[:, L - d:], x[:, :L - d]], axis=1)
+        x = x + jnp.where(pos >= d, shifted, zero)
+    out_ref[...] = x
+
+
+def _pallas_in_chunk(term, pos, L: int, interpret: bool):
+    """Run the in-chunk levels (d < L) over the (nc, L) chunk grid."""
+    C_pad = term.shape[0]
+    nc = C_pad // L
+    levels = max(L - 1, 0).bit_length()     # log2(L): steps 1, 2, .., L/2
+    tr = term.reshape(nc, L)
+    pr = pos.reshape(nc, L)
+    out = pl.pallas_call(
+        lambda *refs: _scan_kernel(levels, *refs),
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda c: (c, 0)),
+            pl.BlockSpec((1, L), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, L), term.dtype),
+        scratch_shapes=[pltpu.VMEM((max(levels, 1), L), term.dtype)],
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(tr, pr)
+    return out.reshape(-1)
+
+
+def seg_cumsum_v2(term, start, *, chunk: int = 128,
+                  interpret: Optional[bool] = None,
+                  force_pallas: bool = False):
+    """Segmented inclusive prefix sum of ``term`` (1D, any add-closed
+    dtype), restarting where ``start`` is True — BIT-identical to
+    ``des_scan._segmented_cumsum(term, start)`` on every path.
+
+    ``chunk`` (power of two) sets the in-kernel level split L; it changes
+    the execution schedule only, never the addition tree, so every chunk
+    size produces the same bytes.  ``interpret=None`` resolves to the
+    backend default (compiled on TPU, jnp emulation elsewhere);
+    ``force_pallas`` runs the real kernel under the Pallas interpreter
+    (parity testing)."""
+    if chunk < 1 or (chunk & (chunk - 1)):
+        raise ValueError(f"chunk must be a power of two, got {chunk}")
+    C = term.shape[0]
+    if C == 0:
+        return term
+    start = start.astype(bool) if start.dtype != jnp.bool_ else start
+    pos = _in_segment_pos(start)
+    interpret = resolve_kernel_interpret(interpret, warn=False)
+    if interpret and not force_pallas:
+        return _emulate(term, pos)
+
+    # L = min(chunk, pow2_ceil(C)) keeps the in-kernel step set inside the
+    # lax step set {2^j < C} even when one chunk covers the whole array.
+    L = min(chunk, _pow2_ceil(C))
+    pad = (-C) % L
+    if pad:        # tail pad: fresh zero segments; sliced off below
+        term = jnp.concatenate([term, jnp.zeros((pad,), term.dtype)])
+        pos = jnp.concatenate([pos, jnp.zeros((pad,), pos.dtype)])
+    x = _pallas_in_chunk(term, pos, L, interpret=interpret and force_pallas)
+
+    # tail steps d = L, 2L, ... while d < C — plain global shifts; padding
+    # sits at the END of the array so element p < C reads exactly the same
+    # operands as the unpadded lax scan.
+    d = L
+    while d < C:
+        shifted = jnp.concatenate([jnp.zeros((d,), x.dtype), x[:-d]])
+        x = x + jnp.where(pos >= d, shifted, jnp.zeros((), x.dtype))
+        d *= 2
+    return x[:C]
+
+
+def _scatter_kernel(f_ref, order_ref, sent_ref, out_ref):
+    """Fused epilogue: ``out[order[i]] = sentinel ? 0 : f[i]``, one dynamic
+    store per element.  ``order`` (identity-padded) is a permutation of the
+    padded index range, so every output slot is written exactly once and no
+    init pass over ``out`` is needed beyond the first grid step."""
+    L = f_ref.shape[1]
+    zero = jnp.zeros((1,), out_ref.dtype)
+
+    def body(i, _):
+        o = order_ref[0, i]
+        val = jnp.where(sent_ref[0, i] != 0, zero, f_ref[0, i][None])
+        out_ref[pl.ds(o, 1)] = val
+        return 0
+
+    jax.lax.fori_loop(0, L, body, 0)
+
+
+def scatter_finish_v2(f, order, is_sentinel, *, chunk: int = 128,
+                      interpret: Optional[bool] = None,
+                      force_pallas: bool = False):
+    """Scatter sorted results back to original rows with the sentinel mask
+    folded in: returns ``out`` with ``out[order[i]] = 0 if is_sentinel[i]
+    else f[i]`` — bitwise the lax ``where`` + ``.at[order].set`` epilogue,
+    in one pass.  ``order`` must be a permutation of ``range(len(f))``."""
+    C = f.shape[0]
+    if C == 0:
+        return f
+    interpret = resolve_kernel_interpret(interpret, warn=False)
+    if interpret and not force_pallas:
+        masked = jnp.where(is_sentinel, jnp.zeros((), f.dtype), f)
+        return jnp.zeros((C,), f.dtype).at[order].set(masked)
+
+    L = min(chunk, _pow2_ceil(C))
+    pad = (-C) % L
+    if pad:        # identity-pad the permutation; padded rows write 0
+        tail = jnp.arange(C, C + pad, dtype=order.dtype)
+        order = jnp.concatenate([order, tail])
+        f = jnp.concatenate([f, jnp.zeros((pad,), f.dtype)])
+        is_sentinel = jnp.concatenate(
+            [is_sentinel, jnp.ones((pad,), is_sentinel.dtype)])
+    C_pad = C + pad
+    nc = C_pad // L
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda c: (c, 0)),
+            pl.BlockSpec((1, L), lambda c: (c, 0)),
+            pl.BlockSpec((1, L), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((C_pad,), lambda c: (0,)),
+        out_shape=jax.ShapeDtypeStruct((C_pad,), f.dtype),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret and force_pallas,
+    )(f.reshape(nc, L), order.astype(jnp.int32).reshape(nc, L),
+      is_sentinel.astype(jnp.int32).reshape(nc, L))
+    return out[:C]

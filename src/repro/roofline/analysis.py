@@ -18,9 +18,7 @@ import dataclasses
 import glob
 import json
 import os
-from typing import Dict, List, Optional
-
-import zstandard as zstd
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs import SHAPES, get_config
 from repro.roofline.hlo_parse import analyze
@@ -29,6 +27,35 @@ PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 LINK_BW = 50e9               # bytes/s / link (ICI, conservative single link)
 HBM_CAP = 16 * 2 ** 30
+
+# Host-CPU fallbacks (per core, conservative): used by the seg-scan
+# autotuner so rankings computed off-TPU still carry meaningful bottleneck
+# labels.  Rankings only compare candidates against each other, so only the
+# flops:bandwidth RATIO matters for the chosen chunk.
+CPU_PEAK_FLOPS = 5e10
+CPU_MEM_BW = 2e10
+CPU_LINK_BW = 1e10
+
+
+def hw_constants(backend: Optional[str] = None) -> Tuple[float, float, float]:
+    """(peak_flops, mem_bw, link_bw) for a backend name ('tpu' or host)."""
+    if backend == "tpu":
+        return PEAK_FLOPS, HBM_BW, LINK_BW
+    return CPU_PEAK_FLOPS, CPU_MEM_BW, CPU_LINK_BW
+
+
+def roofline_terms(costs, backend: Optional[str] = None
+                   ) -> Tuple[float, float, float, str]:
+    """(t_comp, t_mem, t_coll, bottleneck) for a ``hlo_parse.Costs`` — the
+    same max-term model ``analyze_cell`` applies to dry-run artifacts,
+    reusable on directly-parsed (or analytically-modelled) costs.  This is
+    what the seg-scan chunk autotuner ranks candidates with."""
+    peak, mem_bw, link_bw = hw_constants(backend)
+    t_comp = costs.flops / peak
+    t_mem = costs.hbm_bytes / mem_bw
+    t_coll = costs.coll_bytes / link_bw
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    return t_comp, t_mem, t_coll, max(terms, key=terms.get)
 
 
 @dataclasses.dataclass
@@ -88,6 +115,8 @@ def branch_weights_for(arch: str) -> Optional[List[float]]:
 
 
 def analyze_cell(json_path: str) -> CellRoofline:
+    import zstandard as zstd    # optional dep: only dry-run artifacts use it
+
     meta = json.load(open(json_path))
     hlo_path = json_path.replace(".json", ".hlo.zst")
     txt = zstd.ZstdDecompressor().decompress(

@@ -22,7 +22,8 @@ def test_benchmark_smoke_runs_every_module(tmp_path):
     assert ",FAILED," not in out, out
     # every module emitted at least one line (one representative name each)
     for tag in ("t5.1/", "core/", "grid/", "dist/", "f5.1/", "f5.4/",
-                "f5.9/", "t5.2/", "model/", "serve/", "queue/", "ckpt/"):
+                "f5.9/", "t5.2/", "model/", "serve/", "queue/", "ckpt/",
+                "kernel/"):
         assert tag in out, (tag, out)
     # --smoke must never touch the committed BENCH artifacts
     after = {f: os.path.getmtime(os.path.join(ROOT, f))
