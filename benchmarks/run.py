@@ -111,12 +111,13 @@ def main() -> None:
                             dist_scaling, fault_recovery, fig_5_1_scaling,
                             fig_5_4_matchmaking, fig_5_9_mapreduce,
                             kernel_tuning, queue_stats, serve_brokers,
-                            speedup_model, table_5_1, table_5_2_elastic)
+                            serve_load, speedup_model, table_5_1,
+                            table_5_2_elastic)
     check = "--check" in sys.argv
     mods = (table_5_1, core_scaling, batch_grid, dist_scaling,
             fig_5_1_scaling, fig_5_4_matchmaking, fig_5_9_mapreduce,
             table_5_2_elastic, speedup_model, serve_brokers, fault_recovery,
-            queue_stats, checkpoint_resume, kernel_tuning)
+            queue_stats, checkpoint_resume, kernel_tuning, serve_load)
     if check:
         # only modules whose COMMITTED artifact holds scan_s entries can be
         # compared — skip the rest (e.g. batch_grid's throughput-only JSON)

@@ -1,0 +1,129 @@
+"""Multi-tenant serve front end — requests/s and sojourn SLOs under load.
+
+Drives ``TenantFrontEnd`` with tenant counts {4, 16, 64} (constant total
+request volume, so entries are comparable) over a shared scenario-grid job
+— ONE CompileCache serves every tenant — and records throughput plus the
+admitted-request sojourn p50/p99 for two scenarios per tenant count:
+
+  serve_load/T<n>         clean traffic
+  serve_load_faulty/T<n>  the same traffic with one tenant poisoned by an
+                          unrecoverable injected fault (NaN poison past its
+                          retry budget): its stream fails structured, every
+                          other tenant keeps serving — the bench pins the
+                          overhead of the containment path.
+
+The cluster geometry is FIXED (no scale events) so ``scan_s`` is a stable
+regression gate; scale-under-live-traffic is pinned functionally in
+tests/test_frontend.py instead.
+"""
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):   # standalone: python benchmarks/serve_load.py
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    _root = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, smoke
+from repro.core.cloudsim import SimulationConfig
+from repro.core.des_scan import make_scenario_grid
+from repro.core.dispatch import ElasticDispatcher
+from repro.core.faults import FaultInjector, FaultSpec, RetryPolicy
+from repro.serve.frontend import TenantFrontEnd, grid_request
+
+BENCH_JSON = "BENCH_serve.json"
+
+
+def _grid(B: int, n_vms: int, n_cloudlets: int):
+    cfg = SimulationConfig(n_vms=n_vms, n_cloudlets=n_cloudlets)
+    grid = make_scenario_grid(
+        seeds=range(max(1, -(-B // 8))), mi_scales=[0.75, 1.5],
+        vm_counts=[n_vms // 2, n_vms], mips_dists=["uniform", "fixed"])
+    grid = {k: np.asarray(v)[:B] for k, v in grid.items()}
+    return cfg, grid
+
+
+def _serve_once(d, n_tenants, per_tenant, cfg, grid, chunk, faulty):
+    """One full serve cycle: fresh front end on the (warm) shared
+    dispatcher, admit everything, drain, return (wall, frontend)."""
+    inj = None
+    if faulty:
+        inj = FaultInjector([FaultSpec(kind="nan_poison", chunk=0, times=999,
+                                       tenant="t0")])
+    fe = TenantFrontEnd(d, backlog_max=n_tenants * per_tenant + 1,
+                        fault_injector=inj)
+    policy = RetryPolicy(max_attempts=2, check_finite=faulty)
+    for i in range(n_tenants):
+        fe.register_tenant(f"t{i}", retry_policy=policy)
+    for r in range(per_tenant):
+        for i in range(n_tenants):
+            dec = fe.submit(grid_request(f"t{i}", cfg, grid, chunk=chunk))
+            assert dec.admitted, dec
+    t0 = time.perf_counter()
+    fe.run()
+    return time.perf_counter() - t0, fe
+
+
+def bench_cell(n_tenants, total_requests, B, n_vms, n_cloudlets, chunk,
+               members, faulty, reps=2):
+    cfg, grid = _grid(B, n_vms, n_cloudlets)
+    d = ElasticDispatcher(devices=jax.devices()[:members],
+                          start_members=members, dispatch_ahead=2)
+    per_tenant = max(1, total_requests // n_tenants)
+    _serve_once(d, n_tenants, 1, cfg, grid, chunk, faulty)   # compile warmup
+    best = None
+    for _ in range(reps):
+        wall, fe = _serve_once(d, n_tenants, per_tenant, cfg, grid, chunk,
+                               faulty)
+        if best is None or wall < best[0]:
+            best = (wall, fe)
+    wall, fe = best
+    s = fe.summary()
+    soj = s["stats"]["sojourn"]
+    n_done = sum(t["completed"] for t in s["tenants"].values())
+    n_fail = sum(t["failed"] for t in s["tenants"].values())
+    # nothing may go missing: every admitted request either completed or
+    # failed structurally (no shedding on this fixed-geometry bench)
+    assert n_done + n_fail == per_tenant * n_tenants, s["tenants"]
+    core = f"serve_load{'_faulty' if faulty else ''}/T{n_tenants}"
+    entry = {"core": core, "n_tenants": n_tenants,
+             "n_requests": per_tenant * n_tenants, "n_scenarios": B,
+             "n_vms": n_vms, "n_cloudlets": n_cloudlets,
+             "n_members": members, "chunk": chunk, "scan_s": wall,
+             "requests_per_s": (per_tenant * n_tenants) / wall,
+             "sojourn_p50_s": soj.get("hist_p50"),
+             "sojourn_p99_s": soj.get("hist_p99"),
+             "completed": n_done, "failed": n_fail,
+             "cache_builds": s["cache"]["builds"]}
+    emit(core.replace("/", "_"), wall * 1e6,
+         f"req_s={entry['requests_per_s']:.1f} "
+         f"p99={soj.get('hist_p99', float('nan')) * 1e3:.1f}ms "
+         f"failed={n_fail}")
+    return entry
+
+
+def main():
+    if smoke():
+        tenant_counts, total, B, n_vms, n_cl, chunk = (2, 4), 8, 8, 16, 200, 4
+    else:
+        tenant_counts, total, B, n_vms, n_cl, chunk = ((4, 16, 64), 64, 16,
+                                                       64, 1_000, 8)
+    members = min(4, len(jax.devices()))
+    entries = [bench_cell(T, total, B, n_vms, n_cl, chunk, members, faulty)
+               for T in tenant_counts for faulty in (False, True)]
+    return {"n_devices": len(jax.devices()), "entries": entries}
+
+
+if __name__ == "__main__":
+    _path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         BENCH_JSON)
+    with open(_path, "w") as f:
+        json.dump(main(), f, indent=2)
+    print(f"wrote {_path}")

@@ -77,6 +77,7 @@ left drained and reusable either way.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import math
@@ -443,6 +444,10 @@ class DispatchReport:
     resumed_from: Optional[str] = None
     chunks_skipped: int = 0
     chunks_replayed: int = 0
+    # multi-tenant serving: the tenant this stream belongs to (``submit``'s
+    # ``tenant=`` — set by TenantFrontEnd so failures, journals, and stats
+    # are attributable to the submitting tenant); None for direct callers
+    tenant: Optional[str] = None
     # queueing-theoretic observability (``collect_stats`` / policy="mmn"):
     # per-stage latency decomposition (queue_wait / service / validate /
     # sojourn: windowed mean + percentiles, log-bucket histogram quantiles),
@@ -902,6 +907,7 @@ class ElasticDispatcher:
                fault_injector: Optional[FaultInjector] = None,
                collect_stats: Optional[bool] = None,
                checkpoint: Optional[CheckpointPolicy] = None,
+               tenant: Optional[str] = None,
                _resume: Optional[dict] = None
                ) -> Tuple[object, DispatchReport]:
         """Stream ``items`` (a pytree of arrays sharing leading dim B)
@@ -979,6 +985,29 @@ class ElasticDispatcher:
         """
         if deliver not in ("device", "host"):
             raise ValueError(f"unknown deliver {deliver!r}")
+        if tenant is not None:
+            # tenant-scoped stream: bind the fault injector so tenant-
+            # addressed specs fire only inside THIS stream (replays
+            # included), and tag the report — JobFailedError reports too,
+            # so a failed tenant's post-mortem names its owner
+            inj = (fault_injector if fault_injector is not None
+                   else self.fault_injector)
+            ctx = (inj.bind_tenant(tenant) if inj is not None
+                   else contextlib.nullcontext())
+            try:
+                with ctx:
+                    out, rep = self.submit(
+                        job, items, replicated=replicated, chunk=chunk,
+                        on_chunk=on_chunk, dispatch_ahead=dispatch_ahead,
+                        deliver=deliver, retry_policy=retry_policy,
+                        fault_injector=fault_injector,
+                        collect_stats=collect_stats, checkpoint=checkpoint,
+                        _resume=_resume)
+            except JobFailedError as e:
+                e.report.tenant = tenant
+                raise
+            rep.tenant = tenant
+            return out, rep
         leaves = jax.tree_util.tree_leaves(items)
         if not leaves:
             raise ValueError("submit needs at least one item array")

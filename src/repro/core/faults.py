@@ -53,6 +53,7 @@ bit-identical bytes, so a recovered stream equals a fault-free run exactly.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -167,12 +168,21 @@ class RetryPolicy:
 class FaultSpec:
     """One addressable fault: ``(chunk, member, kind)`` + kind parameters.
     ``times`` bounds how often it fires (default once — the transient-fault
-    model: the replay succeeds), so recovery is observable, not a loop."""
+    model: the replay succeeds), so recovery is observable, not a loop.
+    ``tenant`` scopes the fault to ONE tenant's streams: it fires only when
+    the injector is bound to that tenant (``bind_tenant``, which
+    ``ElasticDispatcher.submit(tenant=...)`` does for the stream's
+    duration) — the multi-tenant front end uses this to target chaos at a
+    single misbehaving tenant while every other tenant's requests pass the
+    same injector untouched.  ``None`` (the default) matches any stream,
+    tenant-bound or not — pre-existing schedules behave exactly as
+    before."""
     kind: str
     chunk: int
     member: int = 0
     delay_s: float = 0.25            # stall: injected extra latency
     times: int = 1
+    tenant: Optional[str] = None     # None = fires for every stream
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -201,36 +211,68 @@ class FaultInjector:
         # in-process preemption tests can catch and resume from), True calls
         # os._exit(137) — no atexit, no finally blocks, the SIGKILL shape
         self.hard_exit = hard_exit
+        # the tenant the CURRENT stream belongs to (bind_tenant): tenant-
+        # scoped specs fire only when it matches; None-tenant specs always do
+        self._tenant: Optional[str] = None
 
     @classmethod
     def random_schedule(cls, seed: int, n_chunks: int, max_members: int = 1,
                         n_faults: int = 3,
                         kinds: Sequence[str] = FAULT_KINDS,
-                        stall_delay_s: float = 0.25) -> "FaultInjector":
+                        stall_delay_s: float = 0.25,
+                        tenants: Optional[Sequence[str]] = None
+                        ) -> "FaultInjector":
         """A reproducible chaos schedule: ``n_faults`` specs drawn uniformly
         over (kind, chunk, member) from ``np.random.RandomState(seed)`` —
         the same seed always yields the same schedule, on any host.  The
         default pool is ALL of ``FAULT_KINDS`` (``coordinator_crash``
         included since the durable-dispatch PR); pass an explicit ``kinds``
-        to pin a pre-existing schedule."""
+        to pin a pre-existing schedule.  ``tenants`` additionally draws a
+        tenant target per spec (the extra rng draws happen AFTER every
+        pre-existing one, so a given seed's (kind, chunk, member) triples
+        are unchanged whether or not tenants are requested) — chaos tests
+        can aim a whole schedule at one tenant deterministically with
+        ``tenants=["t3"]``."""
         rng = np.random.RandomState(seed)
-        specs = [FaultSpec(kind=str(rng.choice(list(kinds))),
-                           chunk=int(rng.randint(0, max(n_chunks, 1))),
-                           member=int(rng.randint(0, max(max_members, 1))),
-                           delay_s=stall_delay_s)
-                 for _ in range(n_faults)]
-        return cls(specs)
+        triples = [(str(rng.choice(list(kinds))),
+                    int(rng.randint(0, max(n_chunks, 1))),
+                    int(rng.randint(0, max(max_members, 1))))
+                   for _ in range(n_faults)]
+        owners = ([None] * n_faults if tenants is None else
+                  [str(rng.choice(list(tenants))) for _ in range(n_faults)])
+        return cls([FaultSpec(kind=k, chunk=c, member=m,
+                              delay_s=stall_delay_s, tenant=t)
+                    for (k, c, m), t in zip(triples, owners)])
+
+    # ------------------------------------------------------------- scoping
+    @contextlib.contextmanager
+    def bind_tenant(self, tenant: Optional[str]):
+        """Scope the injector to ``tenant`` for one stream: tenant-addressed
+        specs fire only while their tenant is bound (``ElasticDispatcher.
+        submit(tenant=...)`` holds the binding for the whole stream,
+        replays included).  Bindings don't nest — the dispatcher runs one
+        stream at a time — and the previous binding is restored on exit."""
+        prev, self._tenant = self._tenant, tenant
+        try:
+            yield self
+        finally:
+            self._tenant = prev
 
     # ------------------------------------------------------------- matching
     def _take(self, kind: str, chunk: int) -> Optional[FaultSpec]:
-        """Consume one firing of the first live spec matching (kind, chunk)."""
+        """Consume one firing of the first live spec matching (kind, chunk)
+        whose tenant scope matches the bound stream (None = any)."""
         for spec in self.schedule:
-            if spec.kind == kind and spec.chunk == chunk and spec.times > 0:
+            if (spec.kind == kind and spec.chunk == chunk and spec.times > 0
+                    and (spec.tenant is None
+                         or spec.tenant == self._tenant)):
                 spec.times -= 1
                 return spec
         return None
 
     def _log(self, kind: str, chunk: int, member, **extra) -> None:
+        if self._tenant is not None:
+            extra.setdefault("tenant", self._tenant)
         self.fired.append({"kind": kind, "chunk": chunk, "member": member,
                            **extra})
 

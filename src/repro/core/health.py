@@ -37,6 +37,11 @@ class HealthConfig:
     mmn_queue_cap: float = 4.0        # waiting chunks/member ≙ full load
     stats_warmup: int = 1             # head samples trimmed from stat windows
     stats_cooldown: int = 0           # tail samples trimmed from stat windows
+    # SLO shedding knee for serve-layer callers (TenantFrontEnd): when the
+    # measured mmn utilization exceeds this AND the cluster is already at
+    # max_instances, lowest-priority tenants are shed first (structured,
+    # journaled rejections — see docs/serving.md); 1.0 disables shedding
+    shed_utilization: float = 0.9
 
 
 @dataclasses.dataclass

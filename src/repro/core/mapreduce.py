@@ -155,48 +155,7 @@ class MapReduceEngine:
         return jnp.asarray(out)
 
     def _dispatch_job(self, job: MapReduceJob) -> DispatchJob:
-        """The MapReduce job as a dispatch descriptor.  ``map_fn`` itself is
-        part of the signature: a fresh closure never reuses another job's
-        executable, while repeated runs of the SAME job object hit the
-        compile cache."""
-        verbose = self.verbose
-        sig = ("mapreduce", self.backend, job.name, job.n_keys, job.map_fn,
-               job.deterministic)
-
-        if job.deterministic:
-            # per-FILE map outputs stream out unreduced; the dispatcher owns
-            # the (position-aligned, member-count-invariant) tree reduction,
-            # so the float result never sees a shard-shaped sum.  Both
-            # backends emit identical per-row values — bit-parity for free.
-            def per_row(files, valid, *_):
-                del valid                # dispatcher masks the padded rows
-                return jax.vmap(job.map_fn)(files)
-
-            kw = ({"member_fn": per_row} if self.backend == "hazelcast"
-                  else {"global_fn": per_row})
-            return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
-                               reduce="sum", deterministic=True, **kw)
-
-        if self.backend == "hazelcast":
-            # explicit member-local map + collective reduce (psum)
-            def member_fn(local_files, valid, *_):
-                counts = jax.vmap(job.map_fn)(local_files)   # one per file
-                if verbose:
-                    jax.debug.print("[member] mapped {} files locally",
-                                    local_files.shape[0])
-                counts = jnp.where(valid[:, None], counts, 0)
-                return counts.sum(axis=0)
-
-            return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
-                               member_fn=member_fn, reduce="sum")
-
-        # infinispan: one global expression, auto-SPMD partitioning
-        def global_fn(files, valid, *_):
-            counts = jax.vmap(job.map_fn)(files)
-            return jnp.where(valid[:, None], counts, 0).sum(axis=0)
-
-        return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
-                           global_fn=global_fn, reduce="sum")
+        return dispatch_job_for(job, self.backend, verbose=self.verbose)
 
     def benchmark(self, job: MapReduceJob, files, repeats: int = 3, *,
                   chunk: Optional[int] = None):
@@ -208,6 +167,55 @@ class MapReduceEngine:
             out = self.run(job, files, chunk=chunk)
         jax.block_until_ready(out)
         return out, (time.perf_counter() - t0) / repeats
+
+
+def dispatch_job_for(job: MapReduceJob, backend: str = "hazelcast",
+                     verbose: bool = False) -> DispatchJob:
+    """The MapReduce job as a dispatch descriptor — module-level so engine-
+    LESS callers (``serve.frontend.mapreduce_request``) can build dispatch
+    jobs too.  ``map_fn`` itself is part of the signature: a fresh closure
+    never reuses another job's executable, while repeated submissions of
+    the SAME job object hit the compile cache (the multi-tenant
+    amortization path: tenants sharing one job object share one
+    executable)."""
+    assert backend in ("hazelcast", "infinispan")
+    sig = ("mapreduce", backend, job.name, job.n_keys, job.map_fn,
+           job.deterministic)
+
+    if job.deterministic:
+        # per-FILE map outputs stream out unreduced; the dispatcher owns
+        # the (position-aligned, member-count-invariant) tree reduction,
+        # so the float result never sees a shard-shaped sum.  Both
+        # backends emit identical per-row values — bit-parity for free.
+        def per_row(files, valid, *_):
+            del valid                # dispatcher masks the padded rows
+            return jax.vmap(job.map_fn)(files)
+
+        kw = ({"member_fn": per_row} if backend == "hazelcast"
+              else {"global_fn": per_row})
+        return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
+                           reduce="sum", deterministic=True, **kw)
+
+    if backend == "hazelcast":
+        # explicit member-local map + collective reduce (psum)
+        def member_fn(local_files, valid, *_):
+            counts = jax.vmap(job.map_fn)(local_files)   # one per file
+            if verbose:
+                jax.debug.print("[member] mapped {} files locally",
+                                local_files.shape[0])
+            counts = jnp.where(valid[:, None], counts, 0)
+            return counts.sum(axis=0)
+
+        return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
+                           member_fn=member_fn, reduce="sum")
+
+    # infinispan: one global expression, auto-SPMD partitioning
+    def global_fn(files, valid, *_):
+        counts = jax.vmap(job.map_fn)(files)
+        return jnp.where(valid[:, None], counts, 0).sum(axis=0)
+
+    return DispatchJob(name=f"mapreduce/{job.name}", signature=sig,
+                       global_fn=global_fn, reduce="sum")
 
 
 def make_corpus(n_files: int, file_len: int, vocab: int, seed: int = 0,

@@ -309,6 +309,8 @@ class DispatchStats:
             name: StatsWindow(warmup, cooldown) for name in INTERVALS}
         self.stall_s: List[float] = []
         self.checkpoint_s: List[float] = []
+        self.rejections: Dict[str, int] = {}   # reason -> count (admission/
+        #                                        shedding/serve-layer drops)
         self._open: Dict[int, ChunkTimeline] = {}    # enqueued, not launched
         self._live: Dict[int, ChunkTimeline] = {}    # launched, not validated
         self._last_retire: Optional[float] = None
@@ -363,6 +365,13 @@ class DispatchStats:
         histogram so docs/robustness.md's stall records are quantified."""
         self.stall_s.append(float(delay_s))
         self.hist.record("stall", delay_s)
+
+    def record_rejection(self, reason: str, n: int = 1) -> None:
+        """One structured rejection (admission denial, overload shed, serve
+        drop).  Rejected work never enters the four-stage pipeline, so the
+        latency/queue views are unaffected; ``summary()`` surfaces the
+        per-reason counts so shed load is observable, never silent."""
+        self.rejections[reason] = self.rejections.get(reason, 0) + int(n)
 
     def record_checkpoint(self, write_s: float) -> None:
         """One durable checkpoint's write latency (tmp-dir + rename wall on
@@ -466,6 +475,10 @@ class DispatchStats:
             out["checkpoint"] = {"n": float(len(self.checkpoint_s)),
                                  "total_s": float(sum(self.checkpoint_s)),
                                  "p99": self.hist["checkpoint"].quantile(99)}
+        if self.rejections:
+            out["rejections"] = {k: float(v)
+                                 for k, v in sorted(self.rejections.items())}
+            out["n_rejected"] = float(sum(self.rejections.values()))
         out["queue"] = self.queue_summary(n_servers)
         return out
 

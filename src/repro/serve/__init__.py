@@ -1,0 +1,8 @@
+"""Serving layer: the continuous-batching engine (``scheduler``) and the
+multi-tenant front end (``frontend``) — see docs/serving.md."""
+from repro.serve.frontend import (AdmissionDecision, TenantFrontEnd,
+                                  TenantRequest, TokenBucket, grid_request,
+                                  mapreduce_request)
+
+__all__ = ["AdmissionDecision", "TenantFrontEnd", "TenantRequest",
+           "TokenBucket", "grid_request", "mapreduce_request"]

@@ -1,0 +1,556 @@
+"""Multi-tenant serve front end — admission control, weighted-fair
+scheduling, overload shedding, and per-tenant fault isolation.
+
+The thesis's conclusion pitches the elastic layer as "a general purpose
+auto scaler middleware for a multi-tenanted deployment"; this module is
+that front door.  Many concurrent tenants submit scenario grids and
+MapReduce jobs as ``TenantRequest``s; the ``TenantFrontEnd`` turns them
+into streams on ONE shared ``ElasticDispatcher`` so a single
+``CompileCache`` amortizes compiles across tenants hitting the same
+(geometry, signature).  The pipeline is the classic serving middleware
+shape (net thread → admission queue → worker):
+
+  admission   per-tenant token-bucket quotas + per-tenant and global
+              backlog bounds.  Every refusal is a STRUCTURED
+              ``AdmissionDecision`` with a reason code — journaled,
+              counted in stats, never a silent drop.
+  scheduling  deficit round-robin (DRR) over per-tenant queues: each
+              rotation visit grants ``quantum × weight`` deficit and a
+              queue head is served once its cost (chunk count) is
+              covered.  Deficits persist while a tenant waits, so every
+              admitted, feasible request is eventually served — the
+              no-starvation property tests/test_frontend.py pins.
+              Priorities also ride the WEIGHTED partition rebalance: a
+              request carrying ``key_weights`` feeds
+              ``observe_key_weights(weights × tenant.weight)`` so the
+              next scale event levels partitions by tenant-weighted load.
+  isolation   each stream runs under the submitting tenant's
+              ``RetryPolicy`` budget and deadline, and is bound to the
+              tenant for fault injection (``submit(tenant=...)``): a
+              tenant-addressed fault fires ONLY inside that tenant's
+              stream, the failure is a structured ``JobFailedError``
+              (journal intact when the request checkpoints), the quota is
+              debited, and every other tenant's results are bit-identical
+              to isolated single-tenant runs.
+  shedding    SLO-aware degradation: when the measured M/M/n load
+              (``mmn_load`` over the admission-rate/service QueueSnapshot)
+              passes ``HealthConfig.shed_utilization`` WITH the cluster
+              already at ``max_instances``, queued (never in-flight)
+              requests of the lowest-priority tenants are shed first —
+              each shed is a journaled, RESUMABLE drain marker
+              (``reclaim_shed`` re-queues the parked work), not lost work.
+  scaling     the same QueueSnapshot feeds ``ElasticController.
+              tick_queue`` between requests, so ``policy="mmn"`` scale
+              events fire under live multi-tenant traffic.
+
+See docs/serving.md for the tenancy model and guarantees.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dispatch import DispatchJob, ElasticDispatcher
+from repro.core.faults import FaultInjector, JobFailedError, RetryPolicy
+from repro.core.journal import CheckpointPolicy
+from repro.core.stats import DispatchStats, QueueSnapshot, mmn_load
+
+# admission / shedding reason codes (AdmissionDecision.reason)
+REASONS = ("admitted", "unknown_tenant", "quota_exhausted", "backlog_full",
+           "tenant_backlog_full", "deadline_expired", "shed_overload")
+
+
+@dataclasses.dataclass
+class TenantRequest:
+    """One unit of tenant work: a ``DispatchJob`` plus its item pytree —
+    exactly what ``ElasticDispatcher.submit`` consumes, so a request built
+    by ``grid_request``/``mapreduce_request`` goes through the SAME job
+    and operand normalization as a direct single-tenant run (the
+    bit-identity guarantee rides on that).  ``key_weights`` (optional
+    per-key load, e.g. a grid's per-VM exchange load) makes the next
+    rebalance tenant-priority-aware; ``checkpoint`` journals the stream
+    so a failed request's post-mortem survives."""
+    tenant: str
+    job: DispatchJob
+    items: object
+    chunk: Optional[int] = None
+    replicated: tuple = ()
+    key_weights: Optional[np.ndarray] = None
+    checkpoint: Optional[CheckpointPolicy] = None
+    deadline_s: Optional[float] = None      # overrides the tenant default
+    tag: str = ""                           # caller-visible label
+    # assigned at admission:
+    req_id: int = -1
+    t_admit: float = float("nan")
+
+    @property
+    def n_items(self) -> int:
+        import jax
+        leaves = jax.tree_util.tree_leaves(self.items)
+        return int(leaves[0].shape[0]) if leaves else 0
+
+
+@dataclasses.dataclass
+class AdmissionDecision:
+    """The structured outcome of one admission (or shedding) decision —
+    the serve layer's contract that load is never silently dropped."""
+    admitted: bool
+    reason: str                              # one of REASONS
+    tenant: str
+    req_id: int = -1
+    detail: str = ""
+    retry_after_s: float = 0.0               # quota refill hint (0 = n/a)
+
+    def __post_init__(self):
+        if self.reason not in REASONS:
+            raise ValueError(f"unknown reason {self.reason!r}")
+
+
+class TokenBucket:
+    """Per-tenant admission quota: ``rate`` tokens/s up to ``burst``.
+    Clock-injected so tests are deterministic."""
+
+    def __init__(self, rate: float, burst: float):
+        if burst <= 0:
+            raise ValueError("burst must be > 0")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._t_last: Optional[float] = None
+
+    def _refill(self, now: float) -> None:
+        if self._t_last is not None and np.isfinite(self.rate):
+            self.tokens = min(self.burst,
+                              self.tokens + (now - self._t_last) * self.rate)
+        elif self._t_last is not None:
+            self.tokens = self.burst
+        self._t_last = now
+
+    def take(self, now: float, n: float = 1.0) -> bool:
+        self._refill(now)
+        if self.tokens >= n:
+            self.tokens -= n
+            return True
+        return False
+
+    def debit(self, n: float) -> None:
+        """Penalty charge (a failed job costs quota even though it never
+        completed) — floors at zero, never goes negative."""
+        self.tokens = max(0.0, self.tokens - n)
+
+    def retry_after(self, n: float = 1.0) -> float:
+        if self.rate <= 0 or not np.isfinite(self.rate):
+            return 0.0
+        return max(0.0, (n - self.tokens) / self.rate)
+
+
+@dataclasses.dataclass
+class TenantState:
+    """Everything the front end tracks per tenant."""
+    name: str
+    weight: float = 1.0            # DRR bandwidth share (quantum multiplier)
+    priority: int = 0              # shed order: LOWEST priority sheds first
+    bucket: TokenBucket = None     # admission quota
+    retry_policy: Optional[RetryPolicy] = None
+    deadline_s: Optional[float] = None   # admit-to-dispatch deadline
+    max_queue: Optional[int] = None      # per-tenant backlog bound
+    queue: Deque[TenantRequest] = dataclasses.field(
+        default_factory=collections.deque)
+    deficit: float = 0.0
+    results: Dict[int, object] = dataclasses.field(default_factory=dict)
+    reports: Dict[int, object] = dataclasses.field(default_factory=dict)
+    failures: List[dict] = dataclasses.field(default_factory=list)
+    shed: List[TenantRequest] = dataclasses.field(default_factory=list)
+    stats: DispatchStats = dataclasses.field(
+        default_factory=lambda: DispatchStats(warmup=0, serialized=False))
+    admitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+
+    def backlog_cost(self) -> int:
+        return len(self.queue)
+
+
+class TenantFrontEnd:
+    """The request-serving loop over one shared ``ElasticDispatcher``.
+
+    Single-threaded by design (JAX dispatch is already async under each
+    stream): ``submit`` admits, ``step`` serves exactly one request
+    through DRR, ``run`` drains until idle.  Callers interleave
+    ``submit``/``step`` to model continuous load.
+    """
+
+    def __init__(self, dispatcher: Optional[ElasticDispatcher] = None, *,
+                 devices=None, health_cfg=None, start_members: int = 1,
+                 backlog_max: int = 64, quantum: float = 1.0,
+                 shed_target: Optional[int] = None,
+                 journal_root: Optional[str] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if dispatcher is None:
+            from repro.core.health import HealthConfig
+            dispatcher = ElasticDispatcher(
+                devices=devices, start_members=start_members,
+                health_cfg=health_cfg or HealthConfig(policy="mmn"))
+        self.dispatcher = dispatcher
+        self.clock = clock
+        self.backlog_max = int(backlog_max)
+        self.quantum = float(quantum)
+        # shed drains the global backlog down to this level (queued work
+        # only — in-flight streams always finish)
+        self.shed_target = (max(0, self.backlog_max // 2)
+                            if shed_target is None else int(shed_target))
+        self.fault_injector = fault_injector
+        self.tenants: Dict[str, TenantState] = collections.OrderedDict()
+        self._order: List[str] = []          # DRR rotation order
+        self._rr = 0                         # rotation cursor
+        self._granted = False                # cursor tenant got its grant?
+        self._seq = 0                        # global req_id counter
+        # OPEN-system serve stats: enqueue = admission, dispatch = stream
+        # start, retire = stream end; parallel-server semantics
+        self.stats = DispatchStats(warmup=0, serialized=False)
+        self.rejections: List[AdmissionDecision] = []
+        self.journal_records: List[dict] = []
+        self._journal_path = (None if journal_root is None else
+                              os.path.join(journal_root, "frontend.jsonl"))
+        self._admit_times: Deque[float] = collections.deque(maxlen=128)
+        self._service_s: Deque[float] = collections.deque(maxlen=64)
+
+    # ------------------------------------------------------------- tenancy
+    def register_tenant(self, name: str, *, weight: float = 1.0,
+                        priority: int = 0, rate: float = float("inf"),
+                        burst: float = 8.0,
+                        retry_policy: Optional[RetryPolicy] = None,
+                        deadline_s: Optional[float] = None,
+                        max_queue: Optional[int] = None) -> TenantState:
+        """Register (or re-configure) a tenant.  ``weight`` scales its DRR
+        quantum, ``priority`` orders shedding (lowest sheds first),
+        ``rate``/``burst`` parameterize its admission token bucket."""
+        if weight <= 0:
+            raise ValueError("weight must be > 0")
+        st = TenantState(name=name, weight=float(weight),
+                         priority=int(priority),
+                         bucket=TokenBucket(rate, burst),
+                         retry_policy=retry_policy, deadline_s=deadline_s,
+                         max_queue=max_queue)
+        if name not in self.tenants:
+            self._order.append(name)
+        self.tenants[name] = st
+        return st
+
+    def backlog(self) -> int:
+        return sum(len(s.queue) for s in self.tenants.values())
+
+    # ----------------------------------------------------------- admission
+    def submit(self, req: TenantRequest) -> AdmissionDecision:
+        """Admission control: quota, per-tenant bound, global bound — in
+        that order.  Admitted requests join their tenant's queue; every
+        refusal is journaled, counted, and returned structured."""
+        now = self.clock()
+        st = self.tenants.get(req.tenant)
+        if st is None:
+            return self._reject(req, "unknown_tenant",
+                                detail=f"tenant {req.tenant!r} not "
+                                       "registered")
+        if not st.bucket.take(now):
+            return self._reject(
+                req, "quota_exhausted", st,
+                retry_after_s=st.bucket.retry_after(),
+                detail=f"token bucket empty (rate={st.bucket.rate}/s)")
+        if st.max_queue is not None and len(st.queue) >= st.max_queue:
+            return self._reject(req, "tenant_backlog_full", st,
+                                detail=f"{len(st.queue)} queued >= "
+                                       f"max_queue={st.max_queue}")
+        if self.backlog() >= self.backlog_max:
+            return self._reject(req, "backlog_full", st,
+                                detail=f"global backlog at "
+                                       f"{self.backlog_max}")
+        self._seq += 1
+        req.req_id = self._seq
+        req.t_admit = now
+        st.queue.append(req)
+        st.admitted += 1
+        self._admit_times.append(now)
+        return AdmissionDecision(admitted=True, reason="admitted",
+                                 tenant=req.tenant, req_id=req.req_id)
+
+    def _reject(self, req: TenantRequest, reason: str,
+                st: Optional[TenantState] = None, *, detail: str = "",
+                retry_after_s: float = 0.0) -> AdmissionDecision:
+        dec = AdmissionDecision(admitted=False, reason=reason,
+                                tenant=req.tenant, req_id=req.req_id,
+                                detail=detail, retry_after_s=retry_after_s)
+        self.rejections.append(dec)
+        self.stats.record_rejection(reason)
+        if st is not None:
+            st.rejected += 1
+            st.stats.record_rejection(reason)
+        self._journal({"event": "reject", "tenant": req.tenant,
+                       "req_id": req.req_id, "reason": reason,
+                       "detail": detail})
+        return dec
+
+    # ---------------------------------------------------------------- DRR
+    def _cost(self, req: TenantRequest) -> int:
+        """A request's scheduling cost in CHUNKS — the dispatch-work unit,
+        so weights are fair in device time, not request count."""
+        b = max(req.n_items, 1)
+        chunk = req.chunk or self.dispatcher.chunk_size or b
+        return max(-(-b // max(int(chunk), 1)), 1)
+
+    def _advance(self) -> None:
+        self._rr += 1
+        self._granted = False
+
+    def _pick(self) -> Optional[Tuple[TenantState, TenantRequest]]:
+        """Classic DRR, one request per call: a FRESH visit to a nonempty
+        tenant grants ``quantum × weight`` deficit exactly once; the
+        cursor stays on the tenant while its deficit covers queue heads
+        (so a double-weight tenant serves twice as much work per rotation)
+        and advances when the deficit runs out.  Deficits persist across
+        rotations while a tenant waits — starvation-freedom for feasible
+        requests of any cost — and reset when its queue empties so idle
+        tenants can't bank credit."""
+        if not any(s.queue for s in self.tenants.values()):
+            return None
+        n = len(self._order)
+        for _ in range(2 * n + 1):
+            name = self._order[self._rr % n]
+            st = self.tenants[name]
+            if not st.queue:
+                st.deficit = 0.0
+                self._advance()
+                continue
+            if not self._granted:
+                st.deficit += self.quantum * st.weight
+                self._granted = True
+            if st.deficit >= self._cost(st.queue[0]):
+                req = st.queue.popleft()
+                st.deficit -= self._cost(req)
+                if not st.queue:
+                    st.deficit = 0.0
+                    self._advance()
+                return st, req
+            self._advance()
+        # a full rotation of grants covered no head (every queued request
+        # costs many quanta): top up the tenant at the cursor until its
+        # head is covered — progress beats exact proportionality here
+        while True:
+            st = self.tenants[self._order[self._rr % n]]
+            if st.queue:
+                break
+            self._advance()
+        while st.deficit < self._cost(st.queue[0]):
+            st.deficit += self.quantum * st.weight
+        req = st.queue.popleft()
+        st.deficit -= self._cost(req)
+        if not st.queue:
+            st.deficit = 0.0
+            self._advance()
+        return st, req
+
+    # --------------------------------------------------------------- serve
+    def step(self) -> Optional[dict]:
+        """Serve exactly ONE queued request end to end (or return None when
+        idle): DRR pick → deadline check → tenant-scoped dispatch →
+        stats + scaling feed → shed check.  A tenant's ``JobFailedError``
+        is contained here: recorded, quota-debited, journaled — the loop
+        (and every other tenant) continues."""
+        while True:
+            picked = self._pick()
+            if picked is None:
+                return None
+            st, req = picked
+            deadline = (req.deadline_s if req.deadline_s is not None
+                        else st.deadline_s)
+            t0 = self.clock()
+            if deadline is not None and t0 - req.t_admit > deadline:
+                self._reject(req, "deadline_expired", st,
+                             detail=f"waited {t0 - req.t_admit:.3f}s > "
+                                    f"deadline {deadline}s")
+                continue
+            return self._serve(st, req, t0)
+
+    def _serve(self, st: TenantState, req: TenantRequest,
+               t0: float) -> dict:
+        d = self.dispatcher
+        if req.key_weights is not None:
+            # tenant priority rides the weighted rebalance: hot keys of a
+            # heavier tenant pull proportionally more placement correction
+            d.observe_key_weights(np.asarray(req.key_weights, np.float64)
+                                  * st.weight)
+        outcome = {"tenant": st.name, "req_id": req.req_id, "tag": req.tag,
+                   "ok": False, "error": None}
+        try:
+            out, report = d.submit(
+                req.job, req.items, replicated=req.replicated,
+                chunk=req.chunk, retry_policy=st.retry_policy,
+                fault_injector=self.fault_injector,
+                checkpoint=req.checkpoint, tenant=st.name)
+            t1 = self.clock()
+            st.results[req.req_id] = out
+            st.reports[req.req_id] = report
+            st.completed += 1
+            outcome.update(ok=True, wall_s=t1 - t0)
+        except JobFailedError as e:
+            # per-tenant fault containment: structured failure record, the
+            # report (journal already written by the dispatcher when the
+            # request checkpoints), a quota penalty — and the loop lives on
+            t1 = self.clock()
+            st.bucket.debit(1.0)
+            failure = {"req_id": req.req_id, "tenant": st.name,
+                       "error": e, "report": e.report,
+                       "journal_path": e.report.journal_path}
+            st.failures.append(failure)
+            self._journal({"event": "fail", "tenant": st.name,
+                           "req_id": req.req_id, "detail": str(e),
+                           "journal_path": e.report.journal_path})
+            outcome.update(error=e, wall_s=t1 - t0)
+        # latency stamping (admission → start → end) for both views
+        for coll in (self.stats, st.stats):
+            coll.record(req.req_id, t_enqueue=req.t_admit, t_dispatch=t0,
+                        t_retire=t1)
+        self._service_s.append(max(t1 - t0, 1e-9))
+        # the queue-aware feed (scale events under live traffic) and the
+        # SLO shedding knee are mmn-policy features: the ema policy has no
+        # arrival/service model to judge the measured snapshot against
+        if d.health_cfg.policy == "mmn":
+            snap = self._queue_snapshot()
+            if snap is not None:
+                d.controller.tick_queue(snap)   # mmn scale under live load
+                self._maybe_shed(snap)
+        return outcome
+
+    def run(self, max_requests: Optional[int] = None) -> List[dict]:
+        """Drain the queues: ``step`` until idle (or ``max_requests``)."""
+        outcomes = []
+        while max_requests is None or len(outcomes) < max_requests:
+            o = self.step()
+            if o is None:
+                break
+            outcomes.append(o)
+        return outcomes
+
+    # ------------------------------------------------------------ shedding
+    def _queue_snapshot(self) -> Optional[QueueSnapshot]:
+        if len(self._admit_times) < 2 or not self._service_s:
+            return None
+        span = self._admit_times[-1] - self._admit_times[0]
+        if span <= 0:
+            return None
+        lam = (len(self._admit_times) - 1) / span
+        s_n = float(np.mean(self._service_s))   # cluster service time/req
+        n = max(self.dispatcher.n_members, 1)
+        mu1 = 1.0 / (s_n * n)                   # per-member rate (linear)
+        return QueueSnapshot(arrival_rate=lam, service_rate=mu1,
+                             n_members=n, queue_length=float(self.backlog()))
+
+    def _maybe_shed(self, snap: QueueSnapshot) -> List[AdmissionDecision]:
+        """SLO-aware degradation: past the knee AND already at max scale,
+        park queued requests of the lowest-priority tenants (newest first
+        within a tenant) until the backlog reaches ``shed_target``.  Every
+        shed is a journaled, resumable drain marker — ``reclaim_shed``
+        re-queues the work; nothing is lost."""
+        cfg = self.dispatcher.health_cfg
+        knee = getattr(cfg, "shed_utilization", 1.0)
+        if knee >= 1.0:
+            return []
+        load = mmn_load(snap, cfg.max_threshold, cfg.mmn_queue_cap)
+        at_max = self.dispatcher.n_members >= cfg.max_instances
+        if load < knee or not at_max:
+            return []
+        shed: List[AdmissionDecision] = []
+        order = sorted(self.tenants.values(), key=lambda s: s.priority)
+        for st in order:
+            while st.queue and self.backlog() > self.shed_target:
+                req = st.queue.pop()             # newest first: oldest work
+                st.shed.append(req)              # survives for reclaim
+                dec = self._reject(
+                    req, "shed_overload", st,
+                    detail=f"mmn load {load:.2f} >= knee {knee} at "
+                           f"max_instances={cfg.max_instances}; parked "
+                           f"resumable (reclaim_shed)")
+                self._journal({"event": "shed_marker", "tenant": st.name,
+                               "req_id": req.req_id, "resumable": True})
+                shed.append(dec)
+            if self.backlog() <= self.shed_target:
+                break
+        return shed
+
+    def reclaim_shed(self, tenant: str) -> int:
+        """Resume a tenant's parked drain markers: shed requests rejoin the
+        FRONT of its queue in original admission order, free of quota (they
+        were already paid for).  Returns how many were re-queued."""
+        st = self.tenants[tenant]
+        parked, st.shed = st.shed, []
+        for req in sorted(parked, key=lambda r: r.req_id, reverse=True):
+            st.queue.appendleft(req)
+            self._journal({"event": "reclaim", "tenant": tenant,
+                           "req_id": req.req_id})
+        return len(parked)
+
+    # --------------------------------------------------------- observability
+    def _journal(self, record: dict) -> None:
+        record = {"t": self.clock(), **record}
+        self.journal_records.append(record)
+        if self._journal_path is None:
+            return
+        os.makedirs(os.path.dirname(self._journal_path), exist_ok=True)
+        with open(self._journal_path, "a") as f:
+            f.write(json.dumps(record, default=str) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def summary(self) -> dict:
+        """The serve-level SLO view: global + per-tenant admission,
+        latency, failure, and shed accounting, plus the shared-cluster
+        amortization counters (one CompileCache across tenants)."""
+        d = self.dispatcher
+        per_tenant = {}
+        for name, st in self.tenants.items():
+            s = st.stats.summary(n_servers=max(d.n_members, 1))
+            per_tenant[name] = {
+                "admitted": st.admitted, "completed": st.completed,
+                "rejected": st.rejected, "failed": len(st.failures),
+                "shed": len(st.shed), "queued": len(st.queue),
+                "priority": st.priority, "weight": st.weight,
+                "sojourn_p50": s["sojourn"].get("hist_p50"),
+                "sojourn_p99": s["sojourn"].get("hist_p99"),
+                "rejections": dict(st.stats.rejections),
+            }
+        return {
+            "backlog": self.backlog(),
+            "n_members": d.n_members,
+            "scale_events": len(d.scale_events),
+            "cache": {"hits": d.cache.hits, "builds": d.cache.builds},
+            "tenants": per_tenant,
+            "stats": self.stats.summary(n_servers=max(d.n_members, 1)),
+        }
+
+
+# ------------------------------------------------------------ request builders
+
+def grid_request(tenant: str, cfg, grid, **kw) -> TenantRequest:
+    """A scenario-grid request: goes through the SAME ``grid_batch_args``
+    job/operand normalization as ``run_scenario_grid``, so a tenant's
+    multi-tenant results are bit-identical to its isolated run."""
+    from repro.core.des_scan import grid_batch_args
+    args, job, _ = grid_batch_args(cfg, grid)
+    return TenantRequest(tenant=tenant, job=job, items=args, **kw)
+
+
+def mapreduce_request(tenant: str, job, files, *,
+                      backend: str = "hazelcast", **kw) -> TenantRequest:
+    """A MapReduce request via the module-level ``dispatch_job_for`` —
+    tenants sharing one ``MapReduceJob`` object share one executable in
+    the front end's CompileCache."""
+    from repro.core.mapreduce import dispatch_job_for
+    return TenantRequest(tenant=tenant,
+                         job=dispatch_job_for(job, backend), items=files,
+                         **kw)

@@ -35,6 +35,9 @@ class Request:
     placed_step: int = -1        # decode step the broker bound the slot
     output: Optional[List[int]] = None
     done: bool = False
+    # set when the scheduler refuses the request (e.g. over max_len): the
+    # structured record {req_id, reason, ...} — never a silent drop
+    rejection: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -63,7 +66,14 @@ class Scheduler:
         self.queue: Deque[Request] = deque()
         self._rr_cursor = 0
         self._mm_counter = 0
-        self.dropped = 0
+        # structured rejections: one {req_id, reason, need, max_len} per
+        # refused request (reason "over_max_len" for the infeasible drop)
+        self.rejected: List[dict] = []
+
+    @property
+    def dropped(self) -> int:
+        """Back-compat count of refused requests (len of ``rejected``)."""
+        return len(self.rejected)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -101,8 +111,12 @@ class Scheduler:
         pending = len(self.queue)
         for _ in range(pending):
             req = self.queue.popleft()
-            if self._need(req) > self.max_len:
-                self.dropped += 1
+            need = self._need(req)
+            if need > self.max_len:
+                req.rejection = {"req_id": req.req_id,
+                                 "reason": "over_max_len",
+                                 "need": need, "max_len": self.max_len}
+                self.rejected.append(req.rejection)
                 continue
             slot = (self._assign_round_robin(req) if self.policy == "round_robin"
                     else self._assign_matchmaking(req))
@@ -149,7 +163,8 @@ class ServeEngine:
 
     def _prefill_one(self, req: Request):
         """Prefill a single request into its slot (per-slot cache update)."""
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        toks = jnp.asarray(req.prompt, jnp.int32).reshape(1, -1)
+        nxt = None
         for t in range(toks.shape[1]):
             nxt, self.caches = self._decode(
                 self.params, self.caches,
@@ -157,14 +172,22 @@ class ServeEngine:
                     req.slot, 0].set(int(req.prompt[t])),
                 jnp.int32(t))
         self.lengths[req.slot] = len(req.prompt)
-        self.tokens[req.slot, 0] = int(np.asarray(nxt)[req.slot, 0])
+        # empty prompt: nothing to condition on, so decode starts from a
+        # zero token (the BOS analogue) instead of reading an unbound `nxt`
+        self.tokens[req.slot, 0] = (0 if nxt is None
+                                    else int(np.asarray(nxt)[req.slot, 0]))
 
     def run(self, max_steps: int = 64) -> Dict:
         done: List[Request] = []
+        n_rej_seen = len(self.sched.rejected)
         while self.steps < max_steps:
             for req in self.sched.schedule():
                 req.placed_step = self.steps
                 self._prefill_one(req)
+            # surface this round's refusals in the SLO stats immediately
+            for rej in self.sched.rejected[n_rej_seen:]:
+                self.stats.record_rejection(rej["reason"])
+            n_rej_seen = len(self.sched.rejected)
             if not self.sched.active_slots():
                 if not self.sched.queue:
                     break
@@ -193,6 +216,7 @@ class ServeEngine:
                     self.sched.release(i)
         return {"completed": done, "steps": self.steps,
                 "dropped": self.sched.dropped,
+                "rejected": list(self.sched.rejected),
                 "utilization": self.sched.utilization(),
                 "stats": self.stats.summary(
                     n_servers=len(self.sched.slots))}

@@ -48,6 +48,71 @@ def test_oversize_requests_dropped_waiting_queue_drains():
     s.submit(Request(2, np.zeros(4, np.int32), max_new_tokens=2))
     placed = s.schedule()
     assert s.dropped == 1 and len(placed) == 1 and len(s.queue) == 1
+    # the drop is STRUCTURED, not a bare counter: reason + req_id, attached
+    # to both the scheduler record and the request itself
+    rej = s.rejected[0]
+    assert rej["reason"] == "over_max_len" and rej["req_id"] == 0
+    assert rej["need"] == 34 and rej["max_len"] == 16
+
+
+def _drive_broker(policy, seed, n_requests=30, n_slots=4, max_len=32,
+                  max_rounds=4000):
+    """Continuous-load broker simulation without a model: every round admits
+    fresh requests while serving slots one decode step; returns (scheduler,
+    placement round per req_id, feasibility per req_id)."""
+    rng = np.random.default_rng(seed)
+    s = Scheduler(n_slots=n_slots, max_len=max_len, policy=policy)
+    placed_at, feasible, submitted = {}, {}, 0
+    for rnd in range(max_rounds):
+        while submitted < n_requests and len(s.queue) < 2 * n_slots:
+            plen = int(rng.integers(1, max_len + 8))
+            ntok = int(rng.integers(1, 4))
+            feasible[submitted] = plen + ntok <= max_len
+            s.submit(Request(submitted, np.zeros(plen, np.int32),
+                             max_new_tokens=ntok))
+            submitted += 1
+        for req in s.schedule():
+            placed_at[req.req_id] = rnd
+        for i in s.active_slots():
+            st = s.slots[i]
+            st.budget -= 1
+            if st.budget <= 0:
+                s.release(i)
+        if submitted == n_requests and not s.queue and not s.active_slots():
+            break
+    return s, placed_at, feasible
+
+
+def _broker_fairness_case(policy, seed):
+    s, placed_at, feasible = _drive_broker(policy, seed)
+    for rid, ok in feasible.items():
+        if ok:
+            # no starvation: every admitted, feasible request was placed
+            assert rid in placed_at, (policy, seed, rid)
+        else:
+            assert rid not in placed_at
+            assert any(r["req_id"] == rid and r["reason"] == "over_max_len"
+                       for r in s.rejected), (policy, seed, rid)
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "matchmaking"])
+def test_broker_fairness_no_starvation_under_continuous_load(policy):
+    """Every admitted, feasible request is eventually placed under
+    continuous load; infeasible ones surface as structured rejections.
+    Hypothesis-driven when available, a seeded sweep otherwise."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        for seed in range(20):
+            _broker_fairness_case(policy, seed)
+        return
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6))
+    def run(seed):
+        _broker_fairness_case(policy, seed)
+
+    run()
 
 
 @pytest.mark.parametrize("policy", ["round_robin", "matchmaking"])
@@ -79,3 +144,39 @@ def test_engine_completes_requests(policy):
     # 4 requests into 2 slots: the second pair waited for a free slot
     assert s["sojourn"]["p99"] >= s["service"]["p50"]
     assert 0 < s["queue"]["utilization"] <= 1.0
+
+
+def _tiny_engine(policy="matchmaking", n_slots=2, max_len=24):
+    cfg = reduced(get_config("smollm-360m"), n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=64)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
+                       policy=policy)
+
+
+def test_rejected_requests_surfaced_in_serve_stats():
+    """Regression: an over-max_len drop must be visible in the run result
+    AND the SLO stats — never a silent counter bump."""
+    engine = _tiny_engine()
+    engine.sched.submit(Request(0, np.zeros(40, np.int32),
+                                max_new_tokens=4))          # infeasible
+    engine.sched.submit(Request(1, np.zeros(3, np.int32), max_new_tokens=2))
+    out = engine.run(max_steps=32)
+    assert len(out["completed"]) == 1
+    assert out["dropped"] == 1
+    assert out["rejected"] == [{"req_id": 0, "reason": "over_max_len",
+                                "need": 44, "max_len": 24}]
+    assert out["stats"]["rejections"] == {"over_max_len": 1.0}
+    assert out["stats"]["n_rejected"] == 1.0
+
+
+def test_empty_prompt_does_not_crash_prefill():
+    """Regression: an empty prompt used to leave ``nxt`` unbound in
+    ``_prefill_one`` (NameError); it now decodes from a zero token."""
+    engine = _tiny_engine()
+    engine.sched.submit(Request(0, np.zeros(0, np.int32), max_new_tokens=3))
+    out = engine.run(max_steps=32)
+    assert len(out["completed"]) == 1
+    assert len(out["completed"][0].output) == 3
